@@ -1,0 +1,350 @@
+"""Analytic roofline FLOPs/bytes per (arch × shape), per device.
+
+Why analytic: XLA's ``cost_analysis`` visits a ``lax.scan`` (while-loop)
+body ONCE — with scan-over-layers the reported FLOPs/bytes are ~1/L of the
+truth (verified in tests/test_roofline.py, which checks this calculator
+against ``cost_analysis`` of small configs lowered with the scan fully
+unrolled). The dry-run still supplies the memory analysis and the
+collective schedule; this module supplies the compute/memory roofline
+terms.
+
+Conventions (documented in EXPERIMENTS.md):
+  * matmul FLOPs = 2·M·N·K; a weight matrix contributes 2·params per token
+    (forward). Backward = 2× forward matmul cost; remat adds one extra
+    forward through the stack (train factor 3+1 = 4 forward-equivalents
+    for rematerialized segments; heads/embeddings are not rematerialized:
+    factor 3).
+  * attention (causal, train/prefill): 4·S_eff·H·hd FLOPs/token with
+    S_eff = S/2 (causal average) or min(S, window)·(…) for SWA; decode:
+    4·S_ctx·H·hd per generated token.
+  * HBM bytes: every parameter is read twice (fwd+bwd) and written once
+    per step in training (+ optimizer state r/w); decode reads params once
+    per token + the KV cache/state once per token; activations counted at
+    checkpoint granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.configs.registry import get_config, get_shape
+from repro.models.ssm import MAMBA_HEAD_DIM
+
+BF16 = 2
+F32 = 4
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (exact, matches eval_shape — asserted in tests)
+# ---------------------------------------------------------------------------
+
+def _gqa_params(cfg, d=None):
+    d = d or cfg.d_model
+    hd = cfg.resolved_head_dim
+    return d * hd * (2 * cfg.num_heads + 2 * cfg.num_kv_heads)
+
+
+def _mla_params(cfg):
+    m = cfg.mla
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return (cfg.d_model * m.q_lora_rank + m.q_lora_rank
+            + m.q_lora_rank * cfg.num_heads * qk
+            + cfg.d_model * (m.kv_lora_rank + m.qk_rope_head_dim)
+            + m.kv_lora_rank
+            + m.kv_lora_rank * cfg.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            + cfg.num_heads * m.v_head_dim * cfg.d_model)
+
+
+def _swiglu_params(d, ff):
+    return 3 * d * ff
+
+
+def _mamba2_params(cfg):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    H = di // MAMBA_HEAD_DIM
+    N = cfg.ssm.state_dim
+    cw = cfg.ssm.conv_width
+    return (2 * d * di + d * 2 * N + d * H          # w_z, w_x, w_bc, w_dt
+            + cw * di + cw * 2 * N                   # convs
+            + 3 * H + di + di * d)                   # A_log/dt_bias/D, norm, out
+
+
+def _mlstm_params(cfg):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    H = max(cfg.ssm.num_ssm_heads, 1)
+    dh = di // H
+    return (d * 2 * di + cfg.ssm.conv_width * di
+            + 3 * H * dh * dh + 2 * di * H + H + di + di * d)
+
+
+def _slstm_params(cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ffn = (int(d * 4 / 3) + 127) // 128 * 128
+    return d * 4 * d + H * dh * 4 * dh + 4 * d + d + d * 2 * ffn + ffn * d
+
+
+def layer_param_count(cfg: ModelConfig) -> Dict[str, float]:
+    """Per-kind per-layer param counts + embedding/head."""
+    out = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        attn = _mla_params(cfg) if cfg.attn_type == "mla" else _gqa_params(cfg)
+        if cfg.moe.enabled:
+            e = cfg.moe
+            E_pad = -(-e.num_experts // 16) * 16
+            routed = 3 * cfg.d_model * e.d_ff_expert
+            shared = (3 * cfg.d_model * e.num_shared_experts * e.d_ff_shared
+                      + cfg.d_model if e.num_shared_experts else 0)
+            out["layer"] = attn + 2 * cfg.d_model + cfg.d_model * E_pad \
+                + E_pad * routed + shared
+            out["layer_active"] = attn + 2 * cfg.d_model \
+                + cfg.d_model * E_pad + e.top_k * routed + shared
+        else:
+            out["layer"] = attn + _swiglu_params(cfg.d_model, cfg.d_ff) \
+                + 2 * cfg.d_model
+            out["layer_active"] = out["layer"]
+        out["n_layers"] = cfg.num_layers
+        head = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+        out["embed_head"] = cfg.vocab_size * cfg.d_model + head
+    elif cfg.family == "hybrid":
+        out["layer"] = _mamba2_params(cfg) + cfg.d_model
+        out["layer_active"] = out["layer"]
+        out["n_layers"] = cfg.num_layers
+        out["shared_block"] = (_gqa_params(cfg)
+                               + _swiglu_params(cfg.d_model, cfg.d_ff)
+                               + 2 * cfg.d_model)
+        out["shared_uses"] = cfg.num_layers // cfg.shared_attn_every
+        out["embed_head"] = 2 * cfg.vocab_size * cfg.d_model
+    elif cfg.family == "ssm":
+        n_s = cfg.num_layers // cfg.slstm_every
+        n_m = cfg.num_layers - n_s
+        out["layer"] = (_mlstm_params(cfg) + cfg.d_model)     # mLSTM block
+        out["layer_active"] = out["layer"]
+        out["n_layers"] = n_m
+        out["slstm_layer"] = _slstm_params(cfg) + cfg.d_model
+        out["n_slstm"] = n_s
+        out["embed_head"] = 2 * cfg.vocab_size * cfg.d_model
+    elif cfg.family == "audio":
+        gelu = 2 * cfg.d_model * cfg.d_ff + cfg.d_ff + cfg.d_model
+        enc_layer = _gqa_params(cfg) + gelu + 4 * cfg.d_model
+        dec_layer = 2 * _gqa_params(cfg) + gelu + 6 * cfg.d_model
+        out["layer"] = dec_layer
+        out["layer_active"] = dec_layer
+        out["n_layers"] = cfg.num_layers
+        out["enc_layer"] = enc_layer
+        out["n_enc"] = cfg.encoder_layers
+        out["embed_head"] = (cfg.vocab_size * cfg.d_model
+                             + cfg.encoder_seq * cfg.d_model)
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+def total_params(cfg: ModelConfig, active: bool = False) -> float:
+    p = layer_param_count(cfg)
+    key = "layer_active" if active else "layer"
+    n = p[key] * p["n_layers"] + p["embed_head"]
+    n += p.get("shared_block", 0)                      # shared: ONE copy
+    n += p.get("slstm_layer", 0) * p.get("n_slstm", 0)
+    n += p.get("enc_layer", 0) * p.get("n_enc", 0)
+    return n
+
+
+def _weight_flops_per_token(cfg: ModelConfig) -> float:
+    """2 × active params touched per token by matmuls (weights used per
+    token — shared blocks count once per USE)."""
+    p = layer_param_count(cfg)
+    n = p["layer_active"] * p["n_layers"]
+    n += p.get("shared_block", 0) * p.get("shared_uses", 0)
+    n += p.get("slstm_layer", 0) * p.get("n_slstm", 0)
+    n += p["embed_head"]
+    return 2.0 * n
+
+
+def _attn_flops_per_token(cfg: ModelConfig, s_ctx: float) -> float:
+    """score + PV matmuls per token against s_ctx keys."""
+    hd = cfg.resolved_head_dim
+    if cfg.attn_type == "mla":
+        hd = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+    per_use = 4.0 * s_ctx * cfg.num_heads * hd
+    if cfg.family == "hybrid":
+        return per_use * (cfg.num_layers // cfg.shared_attn_every)
+    if cfg.family == "ssm":
+        return 0.0
+    n_attn = cfg.num_layers + (cfg.encoder_layers if cfg.family == "audio" else 0)
+    if cfg.family == "audio":
+        # decoder self (s_ctx) + cross (encoder_seq) + encoder self counted
+        # separately by caller; simplify: self for num_layers, cross adds
+        n_attn = cfg.num_layers
+        return (per_use * n_attn
+                + 4.0 * cfg.encoder_seq * cfg.num_heads * hd * cfg.num_layers)
+    return per_use * n_attn
+
+
+def _ssm_flops_per_token(cfg: ModelConfig) -> float:
+    """Mamba2/mLSTM chunked-scan arithmetic per token (beyond projections):
+    intra-chunk scores+gather ≈ 2·Q·(N+P) per head, state update 2·N·P."""
+    if cfg.family == "hybrid":
+        di = cfg.ssm.expand * cfg.d_model
+        H = di // MAMBA_HEAD_DIM
+        N, P, Q = cfg.ssm.state_dim, MAMBA_HEAD_DIM, cfg.ssm.chunk_size
+        per_layer = H * (2.0 * Q * (N + P) + 4.0 * N * P)
+        return per_layer * cfg.num_layers
+    if cfg.family == "ssm":
+        di = cfg.ssm.expand * cfg.d_model
+        H = max(cfg.ssm.num_ssm_heads, 1)
+        dh = di // H
+        Q = cfg.ssm.chunk_size
+        n_s = cfg.num_layers // cfg.slstm_every
+        n_m = cfg.num_layers - n_s
+        mlstm = H * (2.0 * Q * 2 * dh + 4.0 * dh * (dh + 1)) * n_m
+        slstm = 2.0 * cfg.d_model * 4 * (cfg.d_model // cfg.num_heads) * n_s
+        return mlstm + slstm
+    return 0.0
+
+
+def roofline_terms(arch: str, shape_name: str, *, n_devices: int = 256,
+                   tp: int = 16, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, ici_bw: float = 50e9,
+                   remat: bool = True) -> Dict[str, float]:
+    cfg = get_config(arch)
+    sh = get_shape(shape_name)
+    N_active = total_params(cfg, active=True)
+    N_total = total_params(cfg)
+
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        s_eff = sh.seq_len / 2
+        if cfg.attn_type == "swa":
+            s_eff = min(sh.seq_len / 2, cfg.window)
+        fwd = (_weight_flops_per_token(cfg)
+               + _attn_flops_per_token(cfg, s_eff)
+               + _ssm_flops_per_token(cfg)) * tokens
+        factor = 4.0 if remat else 3.0          # fwd + bwd(2x) [+ remat fwd]
+        flops = fwd * factor
+        # bytes: params r/w + momentum r/w + grads + checkpoint stack r/w
+        pbytes = N_total * BF16
+        opt_bytes = N_total * (BF16 if N_total > 2e10 else F32)
+        ckpt = (sh.global_batch * sh.seq_len * cfg.d_model * BF16
+                * _n_checkpoint_layers(cfg))
+        hbm = 4 * pbytes + 3 * opt_bytes + 2 * ckpt + 2 * pbytes  # heuristic: fwd2+bwd2 reads, grads+mom, stack
+        # collectives: trust-weighted all-reduce of the update (2x ring) +
+        # the cheaper of (a) per-layer TP psums of activations (2/layer,
+        # both passes) or (b) FSDP-style batch-sharded activations: weight
+        # all-gathers fwd+recompute+bwd plus the dW reduce — the launcher's
+        # activation-sharding policy picks (b) when the per-worker batch
+        # divides TP (see launch/specs.py)
+        upd_ar = 2.0 * N_total * BF16
+        act = sh.global_batch * sh.seq_len * cfg.d_model * BF16
+        tp_coll = 2.0 * _n_tp_collectives(cfg) * act * 2    # fwd+bwd
+        fsdp_coll = (3.0 + 2.0) * N_total * BF16            # 3 AG + dW RS(2x)
+        coll = upd_ar + min(tp_coll, fsdp_coll)
+    elif sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        s_eff = sh.seq_len / 2
+        if cfg.attn_type == "swa":
+            s_eff = min(sh.seq_len / 2, cfg.window)
+        flops = (_weight_flops_per_token(cfg)
+                 + _attn_flops_per_token(cfg, s_eff)
+                 + _ssm_flops_per_token(cfg)) * tokens
+        cache = _cache_bytes(cfg, sh.global_batch, sh.seq_len)
+        hbm = N_total * BF16 + cache + tokens * cfg.d_model * BF16 * 2
+        act = tokens * cfg.d_model * BF16
+        coll = _n_tp_collectives(cfg) * act * 2
+    else:                                        # decode: ONE token
+        tokens = sh.global_batch
+        s_ctx = sh.seq_len
+        if cfg.attn_type == "swa":
+            s_ctx = min(sh.seq_len, cfg.window)
+        flops = (_weight_flops_per_token(cfg)
+                 + _attn_flops_per_token(cfg, s_ctx)
+                 + _ssm_decode_flops(cfg)) * tokens
+        cache = _cache_bytes(cfg, sh.global_batch, sh.seq_len,
+                             window=cfg.window if cfg.attn_type == "swa" else 0)
+        hbm = N_total * BF16 + cache
+        act = tokens * cfg.d_model * BF16
+        coll = _n_tp_collectives(cfg) * act * 2
+
+    compute_s = flops / (n_devices * peak_flops)
+    memory_s = hbm / (n_devices * hbm_bw)
+    collective_s = coll / (n_devices * ici_bw)
+    terms = {"flops": flops, "hbm_bytes": hbm, "collective_bytes": coll,
+             "compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s,
+             "model_flops": (6.0 if sh.kind == "train" else 2.0)
+             * N_active * (sh.global_batch
+                           * (sh.seq_len if sh.kind != "decode" else 1)),
+             "params_total": N_total, "params_active": N_active}
+    terms["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                            key=lambda k: terms[k])
+    terms["useful_ratio"] = terms["model_flops"] / max(flops, 1.0)
+    return terms
+
+
+def _n_checkpoint_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.shared_attn_every
+    if cfg.family == "ssm":
+        return cfg.num_layers // cfg.slstm_every
+    if cfg.family == "audio":
+        return cfg.num_layers + cfg.encoder_layers
+    return cfg.num_layers
+
+
+def _n_tp_collectives(cfg: ModelConfig) -> int:
+    """all-reduces of the residual per layer under TP (attn out + mlp out)."""
+    if cfg.family == "ssm":
+        return 2 * cfg.num_layers // cfg.slstm_every * (cfg.slstm_every - 1)
+    if cfg.family == "hybrid":
+        return cfg.num_layers + 2 * (cfg.num_layers // cfg.shared_attn_every)
+    if cfg.family == "audio":
+        return 2 * cfg.num_layers + 2 * cfg.encoder_layers + cfg.num_layers
+    return 2 * cfg.num_layers
+
+
+def _cache_bytes(cfg: ModelConfig, batch: int, seq: int, window: int = 0):
+    s_eff = min(seq, window) if window else seq
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.attn_type == "mla":
+            per = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            return cfg.num_layers * batch * s_eff * per * BF16
+        per = 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+        return cfg.num_layers * batch * s_eff * per * BF16
+    if cfg.family == "hybrid":
+        di = cfg.ssm.expand * cfg.d_model
+        H = di // MAMBA_HEAD_DIM
+        ssm = cfg.num_layers * batch * H * cfg.ssm.state_dim * MAMBA_HEAD_DIM * F32
+        n_attn = cfg.num_layers // cfg.shared_attn_every
+        kv = n_attn * batch * s_eff * 2 * cfg.num_kv_heads * cfg.resolved_head_dim * BF16
+        return ssm + kv
+    if cfg.family == "ssm":
+        di = cfg.ssm.expand * cfg.d_model
+        H = max(cfg.ssm.num_ssm_heads, 1)
+        dh = di // H
+        n_s = cfg.num_layers // cfg.slstm_every
+        n_m = cfg.num_layers - n_s
+        return (n_m * batch * H * dh * (dh + 1) * F32
+                + n_s * batch * 3 * cfg.d_model * F32)
+    if cfg.family == "audio":
+        per = 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+        return cfg.num_layers * batch * (s_eff + cfg.encoder_seq) * per * BF16
+    raise ValueError(cfg.family)
+
+
+def _ssm_decode_flops(cfg: ModelConfig) -> float:
+    if cfg.family == "hybrid":
+        di = cfg.ssm.expand * cfg.d_model
+        H = di // MAMBA_HEAD_DIM
+        return cfg.num_layers * H * 4.0 * cfg.ssm.state_dim * MAMBA_HEAD_DIM
+    if cfg.family == "ssm":
+        di = cfg.ssm.expand * cfg.d_model
+        H = max(cfg.ssm.num_ssm_heads, 1)
+        dh = di // H
+        n_s = cfg.num_layers // cfg.slstm_every
+        n_m = cfg.num_layers - n_s
+        return n_m * H * 4.0 * dh * (dh + 1) + n_s * 2.0 * cfg.d_model * 4 * (cfg.d_model // cfg.num_heads)
+    return 0.0

@@ -1,0 +1,65 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.configs.base import FederationConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.core.protocol import SDFLBProtocol
+from repro.data.datasets import make_federated_mnist
+
+PAPER_TC = TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd", remat=False)
+
+
+def paper_protocol(workers: int, *, clusters: int = 1, blockchain: bool = True,
+                   seed: int = 0, trust_threshold: float = 0.2,
+                   adversary=None, async_mode: bool = False,
+                   penalty_pct: float = 50.0) -> SDFLBProtocol:
+    fed = FederationConfig(num_clusters=clusters,
+                           workers_per_cluster=workers // clusters,
+                           trust_threshold=trust_threshold,
+                           penalty_pct=penalty_pct,
+                           async_mode=async_mode)
+    return SDFLBProtocol(get_config("paper-net"), fed, PAPER_TC,
+                         use_blockchain=blockchain, seed=seed,
+                         adversary=adversary)
+
+
+def run_rounds(proto, ds, rounds: int, batch: int = 32, eval_every: int = 0,
+               participation_fn=None) -> List[Dict]:
+    """Returns per-eval records {round, accuracy, loss, round_time,...}."""
+    ev = ds.eval_batch(512)
+    log = []
+    for r in range(rounds):
+        part = participation_fn(r) if participation_fn else None
+        t0 = time.monotonic()
+        rec = proto.run_round(ds.round_batches(batch), participation=part)
+        dt = time.monotonic() - t0
+        if eval_every and ((r + 1) % eval_every == 0 or r == rounds - 1):
+            m = proto.evaluate(ev)
+            log.append({"round": r + 1, "accuracy": m["accuracy"],
+                        "loss": m["loss"], "round_time": dt,
+                        "chain_time": rec.chain_time,
+                        "mean_score": float(np.mean(rec.scores))})
+    return log
+
+
+def timeit(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """us per call."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+    row = f"{name},{us:.1f},{derived}"
+    print(row)
+    return row

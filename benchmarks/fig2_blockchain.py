@@ -1,0 +1,49 @@
+"""Paper Fig. 2 — accuracy AND wall-time, 3 workers, with/without blockchain.
+
+Paper claim: accuracy identical with/without blockchain; the blockchain
+variant costs more time per round. Our reproduction runs the SAME seeds so
+learning dynamics are bit-identical; the chain adds hashing/contract/IPFS
+work measured separately.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, paper_protocol, run_rounds
+from repro.data.datasets import make_federated_mnist
+
+
+def run(rounds: int = 60, samples: int = 2048, seed: int = 0):
+    results = {}
+    for chain in (True, False):
+        ds = make_federated_mnist(3, samples=samples, seed=seed)
+        proto = paper_protocol(3, blockchain=chain, seed=seed)
+        log = run_rounds(proto, ds, rounds, eval_every=max(rounds // 10, 1))
+        proto.finalize()
+        results["with" if chain else "without"] = log
+    on, off = results["with"], results["without"]
+    acc_gap = max(abs(a["accuracy"] - b["accuracy"]) for a, b in zip(on, off))
+    t_on = float(np.mean([r["round_time"] for r in on]))
+    t_off = float(np.mean([r["round_time"] for r in off]))
+    chain_on = float(np.mean([r["chain_time"] for r in on]))
+    chain_off = float(np.mean([r["chain_time"] for r in off]))
+    csv_row("fig2_round_time_with_chain", t_on * 1e6,
+            f"acc={on[-1]['accuracy']:.3f} chain_us={chain_on * 1e6:.0f}")
+    csv_row("fig2_round_time_without_chain", t_off * 1e6,
+            f"acc={off[-1]['accuracy']:.3f}")
+    csv_row("fig2_accuracy_gap", 0.0, f"max_gap={acc_gap:.6f}")
+    csv_row("fig2_chain_overhead_pct", chain_on * 1e6,
+            f"{chain_on / max(t_on - chain_on, 1e-9) * 100:.2f}% of round")
+    assert acc_gap < 1e-6, "learning dynamics must be chain-independent"
+    # the chain's extra work is measured directly (hashing + contract +
+    # IPFS); comparing total wall-time is noise-dominated on CPU at this
+    # model size, the paper's "with chain is slower" trend is the positive
+    # per-round chain_time
+    assert chain_on > 10 * chain_off   # chain work is real, off-path ~0
+    return {"with": on, "without": off, "acc_gap": acc_gap,
+            "overhead_pct": chain_on / max(t_on - chain_on, 1e-9) * 100}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run()["with"][-1], indent=1))

@@ -1,0 +1,53 @@
+"""Pallas kernel micro-benchmarks.
+
+On this CPU container the kernels execute in interpret mode — timings are
+NOT TPU-representative (documented); the derived column reports the
+modeled TPU-v5e time from bytes/bandwidth, which is what §Roofline uses.
+The jnp oracle is timed for a like-for-like CPU comparison."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timeit
+from repro.kernels import ops, ref
+
+HBM_BW = 819e9
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    W, D = 16, 1 << 20
+    u = jax.random.normal(key, (W, D), jnp.bfloat16)
+    wts = jax.random.uniform(jax.random.fold_in(key, 1), (W,))
+
+    jd = jax.jit(ref.trust_agg_ref)
+    us = timeit(jd, u, wts, iters=5)
+    model_us = (W * D * 2) / HBM_BW * 1e6
+    csv_row("trust_agg_jnp_cpu", us, f"modeled_v5e_us={model_us:.1f}")
+    us = timeit(lambda a, b: ops.trust_weighted_aggregate(a, b), u, wts,
+                iters=2, warmup=1)
+    csv_row("trust_agg_pallas_interpret", us, "CPU interpret (not TPU perf)")
+
+    js = jax.jit(ref.trust_score_ref)
+    us = timeit(js, u, iters=5)
+    csv_row("trust_score_jnp_cpu", us, f"modeled_v5e_us={model_us:.1f}")
+
+    B, H, KV, hd, S, win = 4, 32, 8, 128, 32768, 4096
+    q = jax.random.normal(key, (B, H, hd), jnp.bfloat16)
+    kc = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd), jnp.bfloat16)
+    vc = jax.random.normal(jax.random.fold_in(key, 3), (B, S, KV, hd), jnp.bfloat16)
+    jr = jax.jit(lambda q, k, v: ref.swa_decode_ref(q, k, v, S - 1, win))
+    us = timeit(jr, q, kc, vc, iters=3)
+    win_bytes = B * win * KV * hd * 2 * 2
+    full_bytes = B * S * KV * hd * 2 * 2
+    csv_row("swa_decode_jnp_fullscan_cpu", us,
+            f"modeled_v5e_us={full_bytes / HBM_BW * 1e6:.1f}")
+    csv_row("swa_decode_kernel_window_model", 0.0,
+            f"modeled_v5e_us={win_bytes / HBM_BW * 1e6:.1f} "
+            f"({S / win:.0f}x less HBM than full scan)")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""§Roofline table generator.
+
+Merges (a) the analytic compute/memory/collective terms (benchmarks.analytic
+— exact param counts, scan-aware FLOPs/bytes) with (b) the dry-run JSON
+(results_dryrun_single.json: per-partition HLO cost numbers, peak memory,
+collective schedule) produced by ``repro.launch.dryrun --all``.
+
+Emits a markdown table (stdout + optionally EXPERIMENTS-ready)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from benchmarks import analytic
+from repro.configs.registry import ARCH_IDS, INPUT_SHAPES, applicable
+
+
+def build_table(dryrun_json: Optional[str] = "results_dryrun_single.json"):
+    dry = {}
+    if dryrun_json and os.path.exists(dryrun_json):
+        for r in json.load(open(dryrun_json)):
+            dry[(r["arch"], r["shape"])] = r
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            ok, reason = applicable(arch, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape, "skip": reason})
+                continue
+            t = analytic.roofline_terms(arch, shape)
+            d = dry.get((arch, shape), {})
+            rows.append({
+                "arch": arch, "shape": shape,
+                "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+                "collective_s": t["collective_s"], "dominant": t["dominant"],
+                "model_flops": t["model_flops"],
+                "useful_ratio": min(t["useful_ratio"], 1.0),
+                "mem_gb": d.get("peak_memory_per_device_gb", float("nan")),
+                "hlo_flops_dev": d.get("flops_per_device", float("nan")),
+            })
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful FLOPs | peak GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skip" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP: {r['skip'][:40]}… | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['useful_ratio'] * 100:.0f}% | {r['mem_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def run(dryrun_json: str = "results_dryrun_single.json"):
+    rows = build_table(dryrun_json)
+    print(markdown(rows))
+    n_dom = {}
+    for r in rows:
+        if "skip" not in r:
+            n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    print(f"\ndominant-term histogram: {n_dom}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Benchmark harness — one entry per paper figure/table + framework-level
+benches. Prints ``name,us_per_call,derived`` CSV rows per experiment.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced rounds/samples (CI-speed)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset (fig2,fig3,fig4,fig56,"
+                         "trust,async,kernels,roofline)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    q = args.quick
+
+    from benchmarks import (async_ablation, cfl_baseline, fig2_blockchain,
+                            fig3_scalability, fig4_reliability,
+                            fig56_convergence, kernel_bench, roofline,
+                            trust_ablation)
+
+    suite = {
+        "fig2": lambda: fig2_blockchain.run(
+            rounds=20 if q else 60, samples=1024 if q else 2048),
+        "fig3": lambda: fig3_scalability.run(
+            rounds=20 if q else 60, samples=2048 if q else 4096),
+        "fig4": lambda: fig4_reliability.run(
+            rounds=16 if q else 40, samples=2048 if q else 4096),
+        "fig56": lambda: fig56_convergence.run(
+            rounds=60 if q else 100, samples=2048 if q else 4096),
+        "trust": lambda: trust_ablation.run(
+            rounds=20 if q else 50, samples=2048 if q else 4096),
+        "async": lambda: async_ablation.run(
+            rounds=16 if q else 40, samples=2048 if q else 4096),
+        "cfl": lambda: cfl_baseline.run(
+            rounds=25 if q else 50, samples=2048 if q else 4096),
+        "kernels": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    failures = []
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.monotonic()
+        try:
+            fn()
+            print(f"[{name}] done in {time.monotonic() - t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED: {failures}")
+        sys.exit(1)
+    print("\nALL BENCHMARKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Scenario: asynchronous SDFL-B with stragglers and failures.
+
+8 workers, 25% of them 6x slower and occasionally dropping updates. The
+event-driven scheduler decides when enough updates arrived (buffer of 4);
+staleness-discounted aggregation folds late updates in when they show up.
+Compares simulated wall-clock against the synchronous barrier.
+
+    PYTHONPATH=src python examples/async_federation.py
+"""
+import numpy as np
+
+from repro.configs.base import FederationConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.core import async_sim
+from repro.core.protocol import SDFLBProtocol
+from repro.data.datasets import make_federated_mnist
+
+
+def main() -> None:
+    W = 8
+    fed = FederationConfig(num_clusters=2, workers_per_cluster=4,
+                           trust_threshold=0.2, async_mode=True,
+                           staleness_alpha=0.5)
+    tc = TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd")
+    proto = SDFLBProtocol(get_config("paper-net"), fed, tc, seed=0)
+    ds = make_federated_mnist(W, samples=4096, seed=0)
+    profiles = async_sim.heterogeneous_profiles(
+        W, straggler_frac=0.25, straggler_slowdown=6.0, failure_prob=0.05,
+        seed=0)
+    sched = async_sim.AsyncScheduler(profiles, seed=0, buffer_size=4)
+
+    ev = ds.eval_batch(512)
+    sync_clock = 0.0
+    for r in range(30):
+        t, mask, staleness = sched.next_aggregation()
+        sync_clock += sched.sync_round_time()
+        proto.run_round(ds.round_batches(32), participation=mask)
+        if (r + 1) % 10 == 0:
+            m = proto.evaluate(ev)
+            print(f"agg {r + 1:3d}  async_clock={t:7.2f}s "
+                  f"(sync would be {sync_clock:7.2f}s)  "
+                  f"arrived={mask.sum()}/{W}  acc={m['accuracy']:.3f}")
+    proto.finalize()
+    print(f"\nasync speedup vs slowest-worker barrier: "
+          f"{sync_clock / t:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

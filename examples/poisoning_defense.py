@@ -1,0 +1,55 @@
+"""Scenario: trust penalization defending against poisoning workers.
+
+8 workers in 2 clusters; two of them label-flip every round. Shows the
+trust scores separating attackers from honest workers, stake erosion via
+Algorithm 1 penalties, and the accuracy protection vs an unprotected run.
+
+    PYTHONPATH=src python examples/poisoning_defense.py
+"""
+import numpy as np
+
+from repro.configs.base import FederationConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.core.protocol import SDFLBProtocol
+from repro.data.datasets import make_federated_mnist
+
+BAD = (0, 5)
+
+
+def flip(batch, round_index):
+    labels = batch["labels"]
+    for w in BAD:
+        labels = labels.at[w].set(9 - labels[w])
+    return {**batch, "labels": labels}
+
+
+def run(trust_on: bool) -> dict:
+    fed = FederationConfig(num_clusters=2, workers_per_cluster=4,
+                           trust_threshold=0.45 if trust_on else -1.0,
+                           soft_trust_weighting=trust_on, penalty_pct=5.0)
+    tc = TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd")
+    proto = SDFLBProtocol(get_config("paper-net"), fed, tc, seed=0,
+                          adversary=flip)
+    ds = make_federated_mnist(8, samples=4096, seed=0)
+    for _ in range(40):
+        rec = proto.run_round(ds.round_batches(32))
+    acc = proto.evaluate(ds.eval_batch(512))["accuracy"]
+    stakes = {w: proto.contract.workers[f"worker-{w}"].stake for w in range(8)}
+    proto.finalize()
+    return {"acc": acc, "scores": rec.scores, "stakes": stakes}
+
+
+def main() -> None:
+    on = run(True)
+    off = run(False)
+    print("final trust scores (defended run):")
+    for w in range(8):
+        tag = "ATTACKER" if w in BAD else "honest"
+        print(f"  worker {w} [{tag:8s}]  S={on['scores'][w]:.3f}  "
+              f"stake_left={on['stakes'][w]:.1f}")
+    print(f"\naccuracy with trust penalization   : {on['acc']:.3f}")
+    print(f"accuracy without (uniform weights) : {off['acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Smart-contract state machine executing the paper's Algorithm 1.
+
+Steps (paper §III.E):
+  1. Requester deploys, depositing D (task reward pool).
+  2. Each worker joins by staking F.
+  3. Per round: workers submit evaluation scores S(w).
+  4. BadWorkers = {w | S(w) < T}.
+     Pen(w) = F · P / 100, deducted from the stake.
+  5. D(w) = F − Pen(w).
+  6. Refund(w) = D(w) at task end.
+  7. Collected penalties transfer to the requester.
+  8. TopKWorkers split the reward pool: Reward(w) = R_total / k.
+
+Every state transition emits a transaction; the ledger stores them in the
+round's block, so balances are fully auditable/replayable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.chain.ledger import Ledger
+
+
+class ContractError(RuntimeError):
+    pass
+
+
+@dataclass
+class WorkerAccount:
+    stake: float                     # remaining deposit D(w)
+    balance: float = 0.0             # rewards + refunds received
+    penalized_rounds: int = 0
+    scores: List[float] = field(default_factory=list)
+
+
+class TrustContract:
+    """One deployed FL task. Mirrors Algorithm 1 exactly."""
+
+    def __init__(self, ledger: Ledger, *, requester_deposit: float,
+                 worker_stake: float, penalty_pct: float,
+                 trust_threshold: float, top_k: int) -> None:
+        if requester_deposit <= 0:
+            raise ContractError("deployment requires a positive deposit")
+        self.ledger = ledger
+        self.F = worker_stake
+        self.P = penalty_pct
+        self.T = trust_threshold
+        self.k = top_k
+        self.reward_pool = requester_deposit
+        self.requester_balance = 0.0
+        self.workers: Dict[str, WorkerAccount] = {}
+        self.pending: List[dict] = [{"type": "deploy", "deposit": requester_deposit,
+                                     "F": worker_stake, "P": penalty_pct,
+                                     "T": trust_threshold, "k": top_k}]
+        self.closed = False
+
+    # -- enrollment ---------------------------------------------------------
+
+    def join(self, worker_id: str) -> None:
+        if self.closed:
+            raise ContractError("task closed")
+        if worker_id in self.workers:
+            raise ContractError(f"{worker_id} already joined")
+        self.workers[worker_id] = WorkerAccount(stake=self.F)
+        self.pending.append({"type": "join", "worker": worker_id, "stake": self.F})
+
+    # -- per-round settlement (Alg. 1 steps 3-7) -----------------------------
+
+    def settle_round(self, round_index: int, scores: Dict[str, float],
+                     model_cid: str = "") -> Dict[str, float]:
+        """Record scores, penalize bad workers, seal the round's block.
+        Returns the penalties imposed this round."""
+        if self.closed:
+            raise ContractError("task closed")
+        unknown = set(scores) - set(self.workers)
+        if unknown:
+            raise ContractError(f"scores from non-participants: {unknown}")
+        penalties: Dict[str, float] = {}
+        for wid, s in sorted(scores.items()):
+            acct = self.workers[wid]
+            acct.scores.append(float(s))
+            self.pending.append({"type": "score", "round": round_index,
+                                 "worker": wid, "score": float(s)})
+            if s < self.T:                                   # BadWorkers
+                pen = min(self.F * self.P / 100.0, acct.stake)
+                acct.stake -= pen
+                acct.penalized_rounds += 1
+                self.requester_balance += pen                # step 7
+                penalties[wid] = pen
+                self.pending.append({"type": "penalty", "round": round_index,
+                                     "worker": wid, "amount": pen})
+        if model_cid:
+            self.pending.append({"type": "model", "round": round_index,
+                                 "cid": model_cid})
+        self.ledger.append_block(self.pending)
+        self.pending = []
+        return penalties
+
+    # -- task finalization (Alg. 1 steps 6 & 8) ------------------------------
+
+    def finalize(self) -> Dict[str, float]:
+        """Refund remaining stakes; pay top-k by mean score. Returns payouts."""
+        if self.closed:
+            raise ContractError("already finalized")
+        self.closed = True
+        txs: List[dict] = []
+        payouts: Dict[str, float] = {}
+        for wid, acct in sorted(self.workers.items()):
+            refund = acct.stake                              # Refund(w) = D(w)
+            acct.stake = 0.0
+            acct.balance += refund
+            payouts[wid] = refund
+            txs.append({"type": "refund", "worker": wid, "amount": refund})
+        ranked = sorted(self.workers,
+                        key=lambda w: (sum(self.workers[w].scores) /
+                                       max(len(self.workers[w].scores), 1)),
+                        reverse=True)
+        top = ranked[: self.k]
+        if top:
+            share = self.reward_pool / len(top)              # R_total / k
+            for wid in top:
+                self.workers[wid].balance += share
+                payouts[wid] = payouts.get(wid, 0.0) + share
+                txs.append({"type": "reward", "worker": wid, "amount": share})
+            self.reward_pool = 0.0
+        self.ledger.append_block(txs)
+        return payouts
+
+    # -- conservation invariant (property tests) -----------------------------
+
+    def total_value(self) -> float:
+        """Money is conserved: pool + requester + stakes + balances."""
+        return (self.reward_pool + self.requester_balance +
+                sum(a.stake + a.balance for a in self.workers.values()))

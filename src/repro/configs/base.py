@@ -1,0 +1,186 @@
+"""Config dataclasses for the SDFL-B framework.
+
+Every assigned architecture gets a module in this package exporting
+``CONFIG: ModelConfig`` (full-size, dry-run only) and ``smoke_config()``
+(reduced variant instantiable on CPU). ``repro.configs.registry`` maps
+``--arch <id>`` to these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration."""
+    num_experts: int = 0            # routed experts
+    top_k: int = 0
+    d_ff_expert: int = 0            # per-expert hidden dim
+    num_shared_experts: int = 0     # always-on shared experts
+    d_ff_shared: int = 0            # per-shared-expert hidden dim
+    router_aux_loss: float = 0.01   # load-balance loss coefficient
+    router_z_loss: float = 0.001
+    capacity_factor: float = 1.25   # GShard-style capacity (tokens dropped
+                                    # beyond C = ceil(k·T/E·cf))
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space (Mamba2 / xLSTM) block configuration."""
+    state_dim: int = 0              # N: per-channel state size (Mamba2) / head state (mLSTM)
+    conv_width: int = 4
+    expand: int = 2                 # inner dim = expand * d_model
+    num_ssm_heads: int = 0          # Mamba2 SSD heads (0 => derived)
+    chunk_size: int = 256           # SSD chunked-scan block length
+
+    @property
+    def enabled(self) -> bool:
+        return self.state_dim > 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek/MiniCPM3-style) configuration."""
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.kv_lora_rank > 0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. ``family`` selects the block builder:
+
+    dense  : pre-norm decoder-only transformer (llama-style)
+    moe    : dense attention + MoE MLP
+    ssm    : xLSTM (mLSTM/sLSTM mix) or pure-Mamba2 stacks
+    hybrid : Mamba2 backbone + shared attention block (zamba2)
+    vlm    : dense decoder consuming early-fused token+patch embeddings
+    audio  : encoder-decoder consuming stub mel-frame embeddings (whisper)
+    cnn    : the paper's own MNIST Net (conv1/conv2/dropout/fc1/fc2)
+    """
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                       # 0 => d_model // num_heads
+    # --- attention flavor ---
+    attn_type: str = "gqa"                  # gqa | mla | swa
+    window: int = 0                         # SWA window (attn_type == "swa")
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- sub-configs ---
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    mla: MLAConfig = field(default_factory=MLAConfig)
+    # --- hybrid (zamba2): shared attention block every k-th layer ---
+    shared_attn_every: int = 0              # 0 => no shared block
+    # --- xLSTM: put an sLSTM block every k-th layer (rest mLSTM) ---
+    slstm_every: int = 0
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500                 # mel-frame count (stub frontend output)
+    # --- vlm (chameleon): stub patch-embedding frontend ---
+    num_patch_tokens: int = 0               # patches prepended per sample
+    # --- paper CNN ---
+    image_size: int = 28
+    num_classes: int = 10
+    cnn_channels: Tuple[int, int] = (10, 20)
+    # --- numerics / citation ---
+    dtype: str = "bfloat16"
+    source: str = ""                        # citation bracket from the assignment
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode path exists (SSM state or sliding window)."""
+        return self.family in ("ssm", "hybrid") or self.attn_type == "swa"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """An assigned input shape. ``kind`` picks train_step vs serve_step."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                               # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+@dataclass(frozen=True)
+class FederationConfig:
+    """SDFL-B protocol configuration (the paper's technique)."""
+    num_clusters: int = 4
+    workers_per_cluster: int = 4            # data axis = clusters * workers
+    # Algorithm 1 economics
+    requester_deposit: float = 1000.0       # D
+    worker_stake: float = 10.0              # F
+    penalty_pct: float = 50.0               # P (percent of F)
+    trust_threshold: float = 0.5            # T on the normalized score
+    top_k_rewarded: int = 4                 # k
+    # trust score blend (EvaluatePerformance): cosine, norm-dev, loss terms
+    w_cosine: float = 0.5
+    w_norm: float = 0.3
+    w_loss: float = 0.2
+    # trust weighting of aggregation (0 => paper-faithful hard filter only)
+    soft_trust_weighting: bool = True
+    # async functionality
+    async_mode: bool = False
+    staleness_alpha: float = 0.5            # weight = 1 / (1 + staleness)**alpha
+    buffer_size: int = 8                    # FedBuff-style buffer capacity
+    # aggregation topology
+    mode: str = "allreduce"                 # "allreduce" | "head_gather" (paper-faithful)
+    head_rotation_seed: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 0.01                        # paper: SGD lr=0.01
+    momentum: float = 0.5                   # paper: momentum=0.5
+    dampening: float = 0.0
+    weight_decay: float = 0.0
+    nesterov: bool = False
+    optimizer: str = "sgd"                  # "sgd" (paper) | "adamw" (LLM configs)
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    grad_clip: float = 0.0
+    local_steps: int = 1                    # local SGD steps per FL round
+    remat: bool = True
+    seed: int = 0
+    opt_dtype: str = "float32"              # optimizer-state dtype ("bfloat16"
+                                            # for the biggest archs: memory fit)
+    kv_chunk: int = 512                     # flash-attention KV chunk (train)

@@ -1,0 +1,56 @@
+"""Asynchronous functionality — jit-compatible buffered/staleness-weighted
+aggregation (the production path; ``async_sim`` is the event-driven host
+simulator).
+
+Round model: each round a participation mask says which workers' updates
+*arrived*. Arrived updates are weighted by trust × staleness-discount and
+aggregated through the cluster hierarchy; absent workers accumulate
+staleness and their pending local progress is folded in when they next
+arrive (FedBuff-style server buffer of capacity ``fed.buffer_size`` is the
+special case where the mask has at most ``buffer_size`` ones).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederationConfig
+from repro.core import hierarchy, trust
+
+
+class AsyncState(NamedTuple):
+    staleness: jax.Array      # (W,) rounds since the worker's last inclusion
+    pending: object           # pytree (W, ...): accumulated unsent updates
+
+
+def init_async_state(updates_like, W: int) -> AsyncState:
+    pending = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32),
+                           updates_like)
+    return AsyncState(staleness=jnp.zeros((W,), jnp.int32), pending=pending)
+
+
+def async_round(updates, scores, mask, state: AsyncState,
+                fed: FederationConfig) -> Tuple[object, AsyncState, jax.Array]:
+    """One asynchronous aggregation round.
+
+    updates: pytree (W, ...) — this round's locally-computed updates.
+    scores:  (W,) trust scores. mask: (W,) 0/1 arrivals.
+    Returns (aggregated_update, new_state, effective_weights)."""
+    maskf = mask.astype(jnp.float32)
+    # arrivals contribute their accumulated pending + fresh update
+    total = jax.tree.map(
+        lambda p, u: p + u.astype(jnp.float32), state.pending, updates)
+    discount = trust.staleness_discount(state.staleness, fed.staleness_alpha)
+    w = trust.trust_weights(scores, fed, participation=mask) * discount
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    agg = hierarchy.aggregate(total, w, fed)
+
+    # arrived workers flush their buffer & reset staleness
+    def flush(p, t):
+        m = maskf.reshape((-1,) + (1,) * (t.ndim - 1))
+        return t * (1.0 - m)
+    new_pending = jax.tree.map(flush, state.pending, total)
+    new_staleness = jnp.where(mask > 0, 0, state.staleness + 1)
+    return agg, AsyncState(new_staleness, new_pending), w

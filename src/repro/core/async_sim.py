@@ -1,0 +1,101 @@
+"""Event-driven asynchronous FL simulator (host level).
+
+Models the paper's §III.E asynchronous functionality faithfully: workers
+have heterogeneous speeds, random delays, and failure probability; updates
+arrive whenever a worker finishes, and the aggregator folds them in without
+waiting for a synchronization barrier. Used by tests/benchmarks to compare
+sync vs async wall-clock and straggler resilience; the jit path
+(``async_agg``) consumes the per-round participation masks this simulator
+produces.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class WorkerProfile:
+    speed: float              # mean seconds per local training round
+    jitter: float = 0.2       # lognormal sigma on the duration
+    failure_prob: float = 0.0  # chance a round's update is lost entirely
+
+
+@dataclass
+class ArrivalEvent:
+    time: float
+    worker: int
+    round_started: int
+
+
+class AsyncScheduler:
+    """Simulates arrival times; yields (time, participation mask) per
+    aggregation tick."""
+
+    def __init__(self, profiles: List[WorkerProfile], *, seed: int = 0,
+                 buffer_size: int = 8, max_wait: float = float("inf")) -> None:
+        self.profiles = profiles
+        self.rng = np.random.default_rng(seed)
+        self.buffer_size = buffer_size
+        self.max_wait = max_wait
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, int]] = []
+        self.staleness = np.zeros(len(profiles), np.int64)
+        self.agg_round = 0
+        for w in range(len(profiles)):
+            self._schedule(w, 0)
+
+    def _schedule(self, w: int, rnd: int) -> None:
+        prof = self.profiles[w]
+        dur = prof.speed * float(self.rng.lognormal(0.0, prof.jitter))
+        heapq.heappush(self._heap, (self.now + dur, w, rnd))
+
+    def next_aggregation(self) -> Tuple[float, np.ndarray, np.ndarray]:
+        """Advance until ``buffer_size`` updates arrive (or max_wait passes).
+        Returns (time, participation mask (W,), staleness snapshot (W,))."""
+        W = len(self.profiles)
+        mask = np.zeros(W, np.int64)
+        deadline = self.now + self.max_wait
+        arrived = 0
+        while arrived < self.buffer_size and self._heap:
+            t, w, rnd = self._heap[0]
+            if t > deadline:
+                break
+            heapq.heappop(self._heap)
+            self.now = t
+            lost = self.rng.random() < self.profiles[w].failure_prob
+            if not lost and not mask[w]:
+                mask[w] = 1
+                arrived += 1
+            # the worker starts its next local round immediately
+            self._schedule(w, rnd + 1)
+        self.now = max(self.now, min(deadline, self.now))
+        snap = self.staleness.copy()
+        self.staleness = np.where(mask > 0, 0, self.staleness + 1)
+        self.agg_round += 1
+        return self.now, mask, snap
+
+    def sync_round_time(self) -> float:
+        """For comparison: a synchronous round waits for the *slowest*
+        worker (expected duration)."""
+        durs = [p.speed * float(self.rng.lognormal(0.0, p.jitter))
+                for p in self.profiles]
+        return max(durs)
+
+
+def heterogeneous_profiles(W: int, *, straggler_frac: float = 0.25,
+                           straggler_slowdown: float = 4.0,
+                           base_speed: float = 1.0, failure_prob: float = 0.0,
+                           seed: int = 0) -> List[WorkerProfile]:
+    rng = np.random.default_rng(seed)
+    profiles = []
+    n_strag = int(round(W * straggler_frac))
+    slow = set(rng.choice(W, size=n_strag, replace=False).tolist())
+    for w in range(W):
+        s = base_speed * (straggler_slowdown if w in slow else 1.0)
+        profiles.append(WorkerProfile(speed=s * float(rng.uniform(0.8, 1.2)),
+                                      failure_prob=failure_prob))
+    return profiles

@@ -1,0 +1,165 @@
+"""The jit-compiled SDFL-B round — the framework's ``train_step``.
+
+Workers carry an explicit leading dim W on params/optimizer-state/batch
+(W = num_clusters × workers_per_cluster [× pods]). On the production mesh W
+is sharded over the ``data`` (× ``pod``) axes, so "worker w" is a
+data-parallel slot whose model is TP-sharded over ``model``. Because the
+worker dim is a *batch* dim (vmap), per-worker gradients stay separate —
+no implicit cross-worker psum — and the paper's aggregation (trust-weighted,
+cluster-hierarchical, optionally asynchronous) is applied explicitly:
+
+  1. broadcast global params to all workers
+  2. ``local_steps`` of per-worker SGD(momentum) on the worker's own shard
+  3. per-worker update u_w = params_w − global
+  4. trust statistics + scores (core.trust — Algorithm 1's evaluation)
+  5. hierarchy.aggregate: intra-cluster FedAvg (cluster head) then
+     trust-weighted head↔head exchange; async mode folds in staleness
+     discounting + pending buffers (core.async_agg)
+  6. new global = global + aggregate
+
+Host-level protocol work (contract settlement, ledger blocks, IPFS
+publication, head rotation bookkeeping) happens *between* jitted rounds in
+``core.protocol``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederationConfig, ModelConfig, TrainConfig
+from repro.core import async_agg, hierarchy, trust
+from repro.models import api
+from repro.optim import clip_grads, init_opt, opt_update
+
+
+class RoundOutput(NamedTuple):
+    global_params: object
+    opt_state: object
+    scores: jax.Array          # (W,) trust scores S(w)
+    weights: jax.Array         # (W,) effective aggregation weights
+    losses: jax.Array          # (W,) final local loss per worker
+    metrics: dict
+
+
+def num_workers(fed: FederationConfig, *, pods: int = 1) -> int:
+    return fed.num_clusters * fed.workers_per_cluster * pods
+
+
+def make_fl_round(cfg: ModelConfig, fed: FederationConfig, tc: TrainConfig,
+                  worker_constraint=None, param_constraint=None):
+    """Builds the synchronous FL-round function (jit-able / lowerable).
+
+    ``worker_constraint``: optional fn(tree_with_leading_W_dim) -> tree that
+    applies sharding constraints pinning the worker dim to the data mesh
+    axes (launch/specs.py builds it). Without it GSPMD may replicate every
+    worker's parameter copy on every data slot — catastrophic at scale.
+
+    ``param_constraint``: optional fn(per-worker param tree) -> tree applied
+    *inside* the differentiated worker loss. Cotangents inherit sharding
+    constraints, so this pins the per-layer grad stacks to the parameter
+    sharding (otherwise the backward scan may emit fully-replicated f32
+    grad stacks).
+    """
+    loss_fn = api.loss_fn(cfg, remat=tc.remat, kv_chunk=tc.kv_chunk)
+    wsc = worker_constraint or (lambda t: t)
+    pwsc = param_constraint or (lambda t: t)
+
+    def worker_train(params, opt, batch, rng):
+        """One worker: ``local_steps`` SGD steps on its own data."""
+
+        def one_step(carry, step_batch):
+            p, o, r = carry
+            r, sub = (jax.random.split(r) if r is not None else (None, None))
+            (l, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                p, step_batch, sub)
+            grads = clip_grads(grads, tc.grad_clip)
+            p, o = opt_update(p, grads, o, tc)
+            return (p, o, r), l
+
+        if tc.local_steps == 1:
+            step_batch = jax.tree.map(lambda x: x[0], batch)
+            (p, o, _), l = one_step((params, opt, rng), step_batch)
+            losses = l[None]
+        else:
+            (p, o, _), losses = jax.lax.scan(one_step, (params, opt, rng), batch)
+        return p, o, losses
+
+    def fl_round(global_params, opt_state, batch, rngs=None,
+                 participation=None, async_state=None):
+        """batch leaves: (W, local_steps, per_worker_batch, ...).
+        participation: optional (W,) 0/1; async_state: async_agg.AsyncState.
+        """
+        W = jax.tree.leaves(batch)[0].shape[0]
+        params_w = wsc(hierarchy.broadcast_to_workers(global_params, W))
+        rngs_w = (jax.random.split(rngs, W) if rngs is not None else None)
+        if tc.local_steps == 1:
+            # single local step: keep only grad computation inside vmap so
+            # the per-worker grads can be sharding-constrained before the
+            # (elementwise, stack-friendly) optimizer update — otherwise the
+            # stacked f32 grads replicate across the model axis.
+            def worker_grad(p, b, r):
+                step_batch = jax.tree.map(lambda x: x[0], b)
+
+                def loss_c(p_, b_, r_):
+                    return loss_fn(pwsc(p_), b_, r_)
+                (l, m), g = jax.value_and_grad(loss_c, has_aux=True)(
+                    p, step_batch, r)
+                return clip_grads(g, tc.grad_clip), l
+            vm = jax.vmap(worker_grad,
+                          in_axes=(0, 0, 0 if rngs is not None else None))
+            grads, l = vm(params_w, batch, rngs_w)
+            new_p, new_opt = opt_update(params_w, wsc(grads), opt_state, tc)
+            losses = l[:, None]
+        else:
+            vm = jax.vmap(worker_train,
+                          in_axes=(0, 0, 0, 0 if rngs is not None else None))
+            new_p, new_opt, losses = vm(params_w, opt_state, batch, rngs_w)
+        new_p = wsc(new_p)
+
+        # deltas are stored in the param dtype (bf16 deltas carry full
+        # *relative* precision; trust stats and aggregation upcast per-leaf)
+        updates = wsc(jax.tree.map(
+            lambda a, g: (a.astype(jnp.float32)
+                          - g.astype(jnp.float32)[None]).astype(a.dtype),
+            new_p, global_params))
+        stats = trust.update_stats(updates, losses[:, 0], losses[:, -1])
+        scores = trust.scores_from_stats(stats, fed)
+
+        if fed.async_mode:
+            assert async_state is not None and participation is not None
+            agg, new_async, weights = async_agg.async_round(
+                updates, scores, participation, async_state, fed)
+        else:
+            weights = trust.trust_weights(scores, fed,
+                                          participation=participation)
+            if fed.mode == "head_gather":
+                agg = hierarchy.aggregate_head_gather(updates, weights, fed)
+            elif fed.mode == "two_stage":
+                agg = hierarchy.aggregate(updates, weights, fed)
+            else:   # "allreduce": fused (identical value, one collective)
+                agg = hierarchy.aggregate_fused(updates, weights)
+            new_async = async_state
+
+        new_global = jax.tree.map(
+            lambda g, a: (g.astype(jnp.float32) + a).astype(g.dtype),
+            global_params, agg)
+        out = RoundOutput(new_global, new_opt, scores, weights,
+                          losses[:, -1],
+                          {"mean_loss": jnp.mean(losses[:, -1])})
+        if fed.async_mode:
+            return out, new_async
+        return out
+
+    return fl_round
+
+
+def init_worker_opt(global_params, fed: FederationConfig, tc: TrainConfig,
+                    *, pods: int = 1):
+    """Per-worker optimizer state: leading W dim on every leaf."""
+    W = num_workers(fed, pods=pods)
+    single = init_opt(global_params, tc)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (W,) + x.shape),
+                        single)

@@ -1,0 +1,193 @@
+"""SDFLBProtocol — host-level orchestration of the paper's full workflow
+(§III.B/C): enrollment + staking on the contract, clustered local training
+(the jitted ``fl_step``), trust scoring + on-chain settlement per round,
+IPFS publication of cluster/global aggregates, deterministic head rotation
+from on-chain randomness, and optional asynchronous arrivals.
+
+Runs the paper's small-scale experiments end-to-end on CPU (Figs. 2-6);
+the same jitted round is what the production launcher shards over pods.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.chain.contract import TrustContract
+from repro.chain.ipfs import IPFSStore
+from repro.chain.ledger import Ledger
+from repro.configs.base import FederationConfig, ModelConfig, TrainConfig
+from repro.core import async_agg, async_sim, fl_step
+from repro.core.gossip import ClusterExchange
+from repro.core.reputation import ReputationBook
+from repro.models import api
+
+
+@dataclass
+class RoundRecord:
+    round_index: int
+    scores: np.ndarray
+    weights: np.ndarray
+    losses: np.ndarray
+    penalties: Dict[str, float]
+    heads: List[int]
+    model_cid: str
+    wall_time: float
+    chain_time: float
+    participation: Optional[np.ndarray] = None
+
+
+class SDFLBProtocol:
+    """One federated task. ``use_blockchain=False`` reproduces the paper's
+    Fig. 2 ablation (identical learning dynamics, no chain work)."""
+
+    def __init__(self, cfg: ModelConfig, fed: FederationConfig,
+                 tc: TrainConfig, *, use_blockchain: bool = True,
+                 seed: int = 0,
+                 adversary: Optional[Callable] = None,
+                 reputation_leaders: bool = False) -> None:
+        self.cfg, self.fed, self.tc = cfg, fed, tc
+        self.use_blockchain = use_blockchain
+        self.W = fl_step.num_workers(fed)
+        self.rng = jax.random.PRNGKey(seed)
+        self.np_rng = np.random.default_rng(seed)
+        self.adversary = adversary    # fn(worker_batch dict, worker_id) -> batch
+
+        key, self.rng = jax.random.split(self.rng)
+        self.global_params, _ = api.init(cfg, key, tp=1)
+        self.opt_state = fl_step.init_worker_opt(self.global_params, fed, tc)
+        self._round_fn = jax.jit(fl_step.make_fl_round(cfg, fed, tc))
+
+        self.async_state = None
+        self.scheduler = None
+        if fed.async_mode:
+            updates_like = jax.tree.map(
+                lambda x: jnp.zeros((self.W,) + x.shape, jnp.float32),
+                self.global_params)
+            self.async_state = async_agg.init_async_state(updates_like, self.W)
+
+        self.ledger = Ledger() if use_blockchain else None
+        self.ipfs = IPFSStore() if use_blockchain else None
+        self.contract = None
+        if use_blockchain:
+            self.contract = TrustContract(
+                self.ledger, requester_deposit=fed.requester_deposit,
+                worker_stake=fed.worker_stake, penalty_pct=fed.penalty_pct,
+                trust_threshold=fed.trust_threshold, top_k=fed.top_k_rewarded)
+            for w in range(self.W):
+                self.contract.join(f"worker-{w}")
+        self.history: List[RoundRecord] = []
+        self.heads = [0] * fed.num_clusters
+        # reputation (EMA of scores + penalty history) drives head election
+        # when reputation_leaders=True — addresses the paper's §VI.E
+        # bad-leader concern while keeping rotation stochastic
+        self.reputation = ReputationBook(self.W)
+        self.reputation_leaders = reputation_leaders
+        self.exchange = (ClusterExchange(self.ipfs, self.ledger,
+                                         fed.num_clusters)
+                         if use_blockchain else None)
+
+    # -- head rotation from on-chain randomness ------------------------------
+
+    def _rotate_heads(self, round_index: int) -> List[int]:
+        if self.ledger is not None:
+            seed = self.ledger.randomness(round_index)
+        else:
+            seed = (self.fed.head_rotation_seed * 1_000_003 + round_index)
+        wpc = self.fed.workers_per_cluster
+        if self.reputation_leaders:
+            self.heads = [
+                self.reputation.elect(range(c * wpc, (c + 1) * wpc),
+                                      rng_seed=seed + c)
+                for c in range(self.fed.num_clusters)]
+        else:
+            rng = np.random.default_rng(seed)
+            self.heads = [int(rng.integers(0, wpc))
+                          for _ in range(self.fed.num_clusters)]
+        return self.heads
+
+    # -- one full protocol round ----------------------------------------------
+
+    def run_round(self, batch: Dict[str, np.ndarray],
+                  participation: Optional[np.ndarray] = None) -> RoundRecord:
+        """batch leaves: (W, B, ...) — a single local step per round (paper's
+        setup); reshaped to (W, 1, B, ...) for the step function."""
+        t0 = time.monotonic()
+        ridx = len(self.history)
+        heads = self._rotate_heads(ridx)
+
+        batch = {k: jnp.asarray(v)[:, None] for k, v in batch.items()}
+        if self.adversary is not None:
+            batch = self.adversary(batch, ridx)
+        self.rng, rkey = jax.random.split(self.rng)
+        part = (None if participation is None
+                else jnp.asarray(participation, jnp.int32))
+
+        if self.fed.async_mode:
+            out, self.async_state = self._round_fn(
+                self.global_params, self.opt_state, batch, rkey,
+                part, self.async_state)
+        else:
+            out = self._round_fn(self.global_params, self.opt_state, batch,
+                                 rkey, part)
+        out = jax.block_until_ready(out)
+        self.global_params, self.opt_state = out.global_params, out.opt_state
+        scores = np.asarray(out.scores)
+        train_time = time.monotonic() - t0
+
+        # ---- blockchain work (scored + penalized on-chain, model on IPFS) ----
+        tc0 = time.monotonic()
+        penalties: Dict[str, float] = {}
+        cid = ""
+        if self.use_blockchain:
+            cid = self.ipfs.put_tree(self.global_params)
+            # cluster heads publish the round's global model for the
+            # cross-cluster hash exchange (paper §III.A)
+            for c in range(self.fed.num_clusters):
+                self.exchange.publish(ridx, c, self.global_params)
+            self.contract.pending.extend(self.exchange.round_transactions(ridx))
+            penalties = self.contract.settle_round(
+                ridx, {f"worker-{w}": float(scores[w]) for w in range(self.W)},
+                model_cid=cid)
+            assert self.ledger.verify_chain()
+        self.reputation.update(
+            scores, penalized=[int(k.split("-")[1]) for k in penalties])
+        chain_time = time.monotonic() - tc0
+
+        rec = RoundRecord(
+            round_index=ridx, scores=scores, weights=np.asarray(out.weights),
+            losses=np.asarray(out.losses), penalties=penalties, heads=heads,
+            model_cid=cid, wall_time=train_time + chain_time,
+            chain_time=chain_time,
+            participation=None if participation is None
+            else np.asarray(participation))
+        self.history.append(rec)
+        return rec
+
+    # -- evaluation ------------------------------------------------------------
+
+    def evaluate(self, eval_batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        loss_fn = api.loss_fn(self.cfg)
+        batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
+        loss, metrics = jax.jit(loss_fn)(self.global_params, batch)
+        return {k: float(v) for k, v in metrics.items()}
+
+    def evaluate_per_worker(self, batch_w: Dict[str, np.ndarray]) -> np.ndarray:
+        """Per-worker eval accuracy of the *global* model on each worker's
+        local shard (the per-worker curves of Figs. 5/6)."""
+        loss_fn = api.loss_fn(self.cfg)
+
+        def one(b):
+            return loss_fn(self.global_params, b)[1]
+        metrics = jax.jit(jax.vmap(one))(
+            {k: jnp.asarray(v) for k, v in batch_w.items()})
+        return {k: np.asarray(v) for k, v in metrics.items()}
+
+    def finalize(self) -> Dict[str, float]:
+        if self.contract is not None:
+            return self.contract.finalize()
+        return {}

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` — the body
+executes in Python on CPU for correctness; on TPU they compile natively.
+``INTERPRET`` flips automatically from the backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.trust_agg import trust_agg as _trust_agg
+from repro.kernels.trust_score import trust_score_stats as _trust_score_stats
+from repro.kernels.swa_decode import swa_decode as _swa_decode
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def trust_weighted_aggregate(updates, weights, *, block_d: int = 2048):
+    """(W, D) updates × (W,) weights -> (D,) f32 aggregate."""
+    return _trust_agg(updates, weights, block_d=block_d, interpret=INTERPRET)
+
+
+def trust_stats(updates, *, block_d: int = 2048):
+    """(W, D) -> (dot (W,), sq_u (W,), sq_c ()) vs consensus mean."""
+    return _trust_score_stats(updates, block_d=block_d, interpret=INTERPRET)
+
+
+def sliding_window_decode(q, k_cache, v_cache, cur_index, *, window: int,
+                          block_s: int = 512):
+    """Single-token sliding-window decode attention (B,H,hd)."""
+    return _swa_decode(q, k_cache, v_cache, cur_index, window=window,
+                       block_s=block_s, interpret=INTERPRET)
+
+
+def ssd_chunk_scan(q, k, v, a, i, *, chunk: int = 256):
+    """Fused SSD/decay-attention recurrence (Mamba2/mLSTM hot loop):
+    (B,S,H,dk)×(B,S,H,dv) with per-step log-decay a and input gate i."""
+    return _ssd_scan(q, k, v, a, i, chunk=chunk, interpret=INTERPRET)
+
+
+def aggregate_pytree(updates, weights):
+    """Trust-weighted aggregation over a pytree with leading worker dim —
+    flattens to one (W, D) matrix per leaf and runs the kernel; small leaves
+    fall back to einsum (kernel launch not worth it)."""
+    def leaf(u):
+        W = u.shape[0]
+        flat = u.reshape(W, -1)
+        if flat.shape[1] < 1024:
+            return jnp.einsum("w,wd->d", weights.astype(jnp.float32),
+                              flat.astype(jnp.float32)).reshape(u.shape[1:])
+        return trust_weighted_aggregate(flat, weights).reshape(u.shape[1:])
+    return jax.tree.map(leaf, updates)

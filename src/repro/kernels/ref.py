@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def trust_agg_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """updates: (W, D), weights: (W,) -> (D,) = Σ_w weights[w]·updates[w]."""
+    return jnp.einsum("w,wd->d", weights.astype(jnp.float32),
+                      updates.astype(jnp.float32))
+
+
+def trust_score_ref(updates: jax.Array):
+    """updates: (W, D) -> (dot (W,), sq_u (W,), sq_c ()) against the
+    consensus c = mean_w updates."""
+    u = updates.astype(jnp.float32)
+    c = jnp.mean(u, axis=0)
+    dot = u @ c
+    sq_u = jnp.sum(u * u, axis=1)
+    sq_c = jnp.sum(c * c)
+    return dot, sq_u, sq_c
+
+
+def swa_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                   cur_index: int, window: int) -> jax.Array:
+    """q: (B, H, hd); caches: (B, S, KV, hd). Single-token sliding-window
+    decode attention -> (B, H, hd)."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qs = q.reshape(B, KV, G, hd).astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.einsum("bkgh,bskh->bkgs", qs, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)
+    valid = (pos <= cur_index) & ((cur_index - pos) < window)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

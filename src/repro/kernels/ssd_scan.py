@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused SSD / decay-attention chunk scan.
+
+The compute hot-spot of Mamba2 (zamba2-7b) and mLSTM (xlstm-1.3b): for each
+(batch, head) the full chunked linear-attention-with-decay recurrence
+
+    y_t = q_t · h_t,   h_t = exp(a_t)·h_{t-1} + i_t · k_t ⊗ v_t
+
+is computed in ONE kernel: the grid's chunk axis is sequential on TPU, so
+the inter-chunk state h (dk × dv) lives in VMEM scratch across grid steps —
+no HBM round-trip of per-chunk states (the pure-jnp path materializes
+(B, n_chunks, H, dk, dv) f32 states + a lax.scan). Intra-chunk work is the
+(Q × Q) decay-masked score matmul on the MXU.
+
+Tiling: grid (B, H, n_chunks); per-tile operands q/k (Q, dk), v (Q, dv),
+gates (Q,) — Q and the head dims are lane-aligned by ops.py padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, a_ref, i_ref,     # (1,1,Q,dk)×2,(1,1,Q,dv),(1,1,Q)×2
+            y_ref,                                  # (1,1,Q,dv)
+            h_scr,                                  # VMEM (dk, dv) f32
+            *, num_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)          # (Q, dk)
+    k = k_ref[0, 0, 0].astype(jnp.float32)
+    v = v_ref[0, 0, 0].astype(jnp.float32)          # (Q, dv)
+    a = a_ref[0, 0, 0].astype(jnp.float32)          # (Q,)
+    i = i_ref[0, 0, 0].astype(jnp.float32)
+
+    Q = q.shape[0]
+    cum = jnp.cumsum(a)                             # (Q,)
+    # L[t, s] = exp(cum_t - cum_s) for t >= s (decay s+1..t)
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    gated = scores * L * i[None, :]
+    y_intra = jax.lax.dot(gated, v, preferred_element_type=jnp.float32)
+
+    # inter-chunk: state before this chunk, decayed to each position
+    h = h_scr[...]
+    y_inter = jax.lax.dot(q, h, preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]
+
+    y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(total)·h + Σ_s exp(total - cum_s)·i_s·k_s⊗v_s
+    total = cum[Q - 1]
+    w = (jnp.exp(total - cum) * i)[:, None]         # (Q, 1)
+    h_scr[...] = h * jnp.exp(total) + jax.lax.dot_general(
+        k * w, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(q, k, v, a, i, *, chunk: int = 256, interpret: bool = False):
+    """q, k: (B, S, H, dk); v: (B, S, H, dv); a, i: (B, S, H).
+    Returns y (B, S, H, dv) — the full decay-attention recurrence.
+    Requires S % chunk == 0."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def to_tiles(x, d):
+        # (B,S,H,d) -> (B,H,nc,Q,d)
+        return jnp.moveaxis(x, 2, 1).reshape(B, H, nc, chunk, d)
+
+    qt, kt, vt = to_tiles(q, dk), to_tiles(k, dk), to_tiles(v, dv)
+    at = jnp.moveaxis(a, 2, 1).reshape(B, H, nc, chunk)
+    it = jnp.moveaxis(i, 2, 1).reshape(B, H, nc, chunk)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, num_chunks=nc),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, dk), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, dk), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, dv), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, dv),
+                               lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, chunk, dv), v.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, at, it)
+    return jnp.moveaxis(y.reshape(B, H, S, dv), 1, 2)

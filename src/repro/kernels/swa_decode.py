@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: sliding-window single-token decode attention.
+
+The sub-quadratic long-context serve path (h2o-danube SWA; zamba2's shared
+attention in long-context mode): one query token per sequence attends to at
+most ``window`` cache slots. Only the ceil(window/BS)+1 KV blocks that can
+intersect the window are streamed from HBM — cache length S never enters
+the work term. Online softmax accumulates across the sequential KV-block
+grid dim in VMEM scratch; ``cur_index`` arrives by scalar prefetch and
+drives the block index map (dynamic window start).
+
+Layout: per (batch, kv-head) program, q tile (G, hd) — the GQA group — and
+KV tiles (BS, hd). G and hd are padded to MXU/lane alignment in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(idx_ref,                      # scalar prefetch: [cur_index]
+            q_ref, k_ref, v_ref,          # (1,1,G,hd), (1,1,BS,hd) ×2
+            o_ref,                        # (1,1,G,hd)
+            m_scr, l_scr, acc_scr,        # VMEM scratch (G,1),(G,1),(G,hd)
+            *, window: int, block_s: int, num_blocks: int):
+    j = pl.program_id(2)
+    cur = idx_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    start_blk = jnp.maximum(cur - window + 1, 0) // block_s
+    pos = (start_blk + j) * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)                          # (1, BS)
+    valid = (pos <= cur) & ((cur - pos) < window)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (BS, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, BS)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                                      # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == num_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_s", "interpret"))
+def swa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+               cur_index, *, window: int, block_s: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); caches: (B, S, KV, hd); cur_index: scalar int32.
+    Returns (B, H, hd). Requires S % block_s == 0 (cache is allocated
+    block-aligned by the serving layer)."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    num_blocks = min(-(-window // block_s) + 1, S // block_s)
+
+    qt = (q.astype(jnp.float32) * scale).reshape(B, KV, G, hd)
+    kt = jnp.moveaxis(k_cache, 2, 1)                         # (B, KV, S, hd)
+    vt = jnp.moveaxis(v_cache, 2, 1)
+    idx = jnp.asarray(cur_index, jnp.int32).reshape(1)
+
+    def kv_index(b, kv, j, idx_ref):
+        start_blk = jnp.maximum(idx_ref[0] - window + 1, 0) // block_s
+        return (b, kv, start_blk + j, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, num_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kv, j, idx: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), kv_index),
+            pl.BlockSpec((1, 1, block_s, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, kv, j, idx: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, block_s=block_s,
+                          num_blocks=num_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(idx, qt, kt, vt)
+    return out.reshape(B, H, hd)

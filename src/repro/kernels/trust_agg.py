@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: trust-weighted aggregation of W worker updates.
+
+The cluster-head hot loop — ``out[d] = Σ_w weights[w] · updates[w, d]`` over
+the flattened update matrix. One HBM pass over the (W, D) matrix instead of
+W separate accumulations: a (1, W) × (W, BD) MXU matmul per VMEM tile of BD
+lanes. The weight row sits in VMEM whole (W is small); D is tiled 128-lane
+aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _kernel(w_ref, upd_ref, out_ref):
+    # w_ref: (1, W) f32 ; upd_ref: (W, BD) ; out_ref: (1, BD) f32
+    out_ref[...] = jnp.dot(w_ref[...],
+                           upd_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def trust_agg(updates: jax.Array, weights: jax.Array, *, block_d: int = 2048,
+              interpret: bool = False) -> jax.Array:
+    """updates: (W, D) any float dtype; weights: (W,) -> (D,) f32.
+
+    D is padded to a multiple of ``block_d`` (itself lane-aligned); the pad
+    contributes zeros and is sliced off.
+    """
+    W, D = updates.shape
+    block_d = max(LANE, (block_d // LANE) * LANE)
+    D_pad = -(-D // block_d) * block_d
+    if D_pad != D:
+        updates = jnp.pad(updates, ((0, 0), (0, D_pad - D)))
+    w_row = weights.astype(jnp.float32).reshape(1, W)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(D_pad // block_d,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((W, block_d), lambda i: (0, i),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((1, D_pad), jnp.float32),
+        interpret=interpret,
+    )(w_row, updates)
+    return out[0, :D]

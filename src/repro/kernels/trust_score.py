@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused per-worker trust statistics.
+
+One HBM sweep over the (W, D) update matrix produces, against the consensus
+c = mean_w u_w:
+
+    dot[w] = <u_w, c>      sq_u[w] = ‖u_w‖²      sq_c = ‖c‖²
+
+i.e. everything ``EvaluatePerformance`` needs for the cosine + norm terms,
+without W+2 separate reductions. The consensus tile is recomputed in-VMEM
+from the update tile (a (1,W)·(W,BD) row mean) — cheaper than a second HBM
+stream of c. Accumulation across D tiles uses the sequential TPU grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _kernel(upd_ref, dot_ref, squ_ref, sqc_ref):
+    i = pl.program_id(0)
+    u = upd_ref[...].astype(jnp.float32)          # (W, BD)
+    W = u.shape[0]
+    c = jnp.mean(u, axis=0, keepdims=True)        # (1, BD) consensus tile
+
+    dot_tile = jnp.sum(u * c, axis=1)[None, :]    # (1, W)
+    squ_tile = jnp.sum(u * u, axis=1)[None, :]    # (1, W)
+    sqc_tile = jnp.sum(c * c).reshape(1, 1)       # (1, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        dot_ref[...] = dot_tile
+        squ_ref[...] = squ_tile
+        sqc_ref[...] = sqc_tile
+
+    @pl.when(i > 0)
+    def _acc():
+        dot_ref[...] += dot_tile
+        squ_ref[...] += squ_tile
+        sqc_ref[...] += sqc_tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def trust_score_stats(updates: jax.Array, *, block_d: int = 2048,
+                      interpret: bool = False):
+    """updates: (W, D) -> (dot (W,), sq_u (W,), sq_c ()) in f32."""
+    W, D = updates.shape
+    block_d = max(LANE, (block_d // LANE) * LANE)
+    D_pad = -(-D // block_d) * block_d
+    if D_pad != D:
+        updates = jnp.pad(updates, ((0, 0), (0, D_pad - D)))
+
+    dot, squ, sqc = pl.pallas_call(
+        _kernel,
+        grid=(D_pad // block_d,),
+        in_specs=[pl.BlockSpec((W, block_d), lambda i: (0, i),
+                               memory_space=pltpu.VMEM)],
+        out_specs=[
+            pl.BlockSpec((1, W), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, W), lambda i: (0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, W), jnp.float32),
+            jax.ShapeDtypeStruct((1, W), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(updates)
+    return dot[0], squ[0], sqc[0, 0]

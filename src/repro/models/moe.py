@@ -1,0 +1,139 @@
+"""Mixture-of-Experts layer (qwen2-moe, olmoe).
+
+Two mathematically-identical implementations:
+
+* ``apply_moe(..., impl="gather")`` — production path. Per-expert top-C
+  token selection (capacity-based, GShard-style dropping) + batched gather,
+  expert matmuls batched over the expert dim (sharded over the ``model``
+  mesh axis => expert parallelism), scatter-add combine. All ops are plain
+  jnp => vmap-safe (needed by the FL worker dim) and GSPMD-shardable.
+* ``apply_moe(..., impl="dense")`` — oracle: every token through every
+  expert, mask-weighted. Used in tests to validate the gather path
+  (identical outputs when capacity is not exceeded).
+
+Experts are padded to a multiple of the TP axis so the expert dim shards
+evenly (padded experts get -inf router logits => never selected).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, maybe, shard_dim
+
+
+def padded_experts(num_experts: int, tp: int) -> int:
+    return int(math.ceil(num_experts / max(tp, 1)) * max(tp, 1))
+
+
+def init_moe(key, d_model: int, moe_cfg, tp: int, dtype):
+    """Router + routed experts (+ optional always-on shared experts)."""
+    E = padded_experts(moe_cfg.num_experts, tp)
+    f = moe_cfg.d_ff_expert
+    ks = jax.random.split(key, 6)
+    params = {
+        "router": dense_init(ks[0], (d_model, E), d_model, jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d_model, f), d_model, dtype),
+        "w_up": dense_init(ks[2], (E, d_model, f), d_model, dtype),
+        "w_down": dense_init(ks[3], (E, f, d_model), f, dtype),
+    }
+    e = maybe(shard_dim(E, tp))
+    fs = maybe(shard_dim(f, tp)) if e is None else None
+    specs = {
+        "router": P(None, None),
+        "w_gate": P(e, None, fs), "w_up": P(e, None, fs), "w_down": P(e, fs, None),
+    }
+    if moe_cfg.num_shared_experts > 0:
+        fsh = moe_cfg.num_shared_experts * moe_cfg.d_ff_shared
+        sh = maybe(shard_dim(fsh, tp))
+        params["shared"] = {
+            "w_gate": dense_init(ks[4], (d_model, fsh), d_model, dtype),
+            "w_up": dense_init(ks[5], (d_model, fsh), d_model, dtype),
+            "w_down": dense_init(jax.random.fold_in(ks[5], 1), (fsh, d_model), fsh, dtype),
+            "gate": dense_init(jax.random.fold_in(ks[4], 1), (d_model, 1), d_model, jnp.float32),
+        }
+        specs["shared"] = {"w_gate": P(None, sh), "w_up": P(None, sh),
+                           "w_down": P(sh, None), "gate": P(None, None)}
+    return params, specs
+
+
+def _router_probs(params, x_flat, moe_cfg):
+    """x_flat: (T, d) -> (probs (T, E) f32 with pads masked, logits)."""
+    E_pad = params["router"].shape[1]
+    logits = x_flat.astype(jnp.float32) @ params["router"]
+    pad_mask = jnp.arange(E_pad) < moe_cfg.num_experts
+    logits = jnp.where(pad_mask[None, :], logits, -1e30)
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def _topk_weights(probs, top_k: int):
+    """(T, E) -> sparse weight matrix (T, E): renormalized top-k probs."""
+    T, E = probs.shape
+    vals, idx = jax.lax.top_k(probs, top_k)                 # (T, k)
+    vals = vals / jnp.maximum(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+    w = jnp.zeros((T, E), jnp.float32)
+    w = w.at[jnp.arange(T)[:, None], idx].set(vals)
+    return w
+
+
+def _aux_losses(probs, w, logits, moe_cfg):
+    """GShard load-balance loss + router z-loss."""
+    E = moe_cfg.num_experts
+    frac_routed = jnp.mean((w > 0).astype(jnp.float32), axis=0) * E   # (E_pad,)
+    mean_prob = jnp.mean(probs, axis=0) * E
+    lb = jnp.sum(frac_routed * mean_prob) / E
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return moe_cfg.router_aux_loss * lb + moe_cfg.router_z_loss * z
+
+
+def _expert_ffn(params, xe):
+    """xe: (E, C, d) -> (E, C, d); batched-over-experts SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"])
+
+
+def apply_moe(params, x, moe_cfg, *, capacity_factor: float = 0.0,
+              impl: str = "gather") -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (out (B, S, d), aux_loss scalar).
+    capacity_factor 0 => take moe_cfg.capacity_factor."""
+    capacity_factor = capacity_factor or moe_cfg.capacity_factor
+    B, S, d = x.shape
+    T = B * S
+    x_flat = x.reshape(T, d)
+    probs, logits = _router_probs(params, x_flat, moe_cfg)
+    w = _topk_weights(probs, moe_cfg.top_k)                 # (T, E_pad)
+    aux = _aux_losses(probs, w, logits, moe_cfg)
+    E_pad = w.shape[1]
+
+    if impl == "dense":
+        # oracle: all tokens through all experts, weighted combine
+        g = jnp.einsum("td,edf->tef", x_flat, params["w_gate"])
+        u = jnp.einsum("td,edf->tef", x_flat, params["w_up"])
+        y = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, params["w_down"])
+        out = jnp.einsum("ted,te->td", y.astype(jnp.float32), w)
+    else:
+        # capacity-based: per-expert top-C tokens by routing weight
+        C = max(1, int(math.ceil(moe_cfg.top_k * T / moe_cfg.num_experts
+                                 * capacity_factor)))
+        C = min(C, T)
+        w_e = w.T                                           # (E_pad, T)
+        top_w, top_idx = jax.lax.top_k(w_e, C)              # (E_pad, C)
+        xe = jnp.take(x_flat, top_idx.reshape(-1), axis=0)
+        xe = xe.reshape(E_pad, C, d)                        # expert-batched gather
+        ye = _expert_ffn(params, xe).astype(jnp.float32)
+        ye = ye * top_w[..., None]                          # dropped tokens have w=0
+        out = jnp.zeros((T, d), jnp.float32)
+        out = out.at[top_idx.reshape(-1)].add(ye.reshape(E_pad * C, d))
+
+    if "shared" in params:
+        sp = params["shared"]
+        shared = (jax.nn.silu(x_flat @ sp["w_gate"]) * (x_flat @ sp["w_up"])) @ sp["w_down"]
+        gate = jax.nn.sigmoid(x_flat.astype(jnp.float32) @ sp["gate"])
+        out = out + gate * shared.astype(jnp.float32)
+
+    return out.reshape(B, S, d).astype(x.dtype), aux

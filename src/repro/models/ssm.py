@@ -1,0 +1,519 @@
+"""State-space blocks: Mamba2 (SSD), xLSTM (mLSTM + sLSTM).
+
+The shared compute core is ``chunked_decay_attention`` — chunkwise
+linear-attention-with-scalar-decay:
+
+    y_t = q_t · ( Σ_{j<=t}  exp(Σ_{l=j+1..t} a_l) · i_j · (k_j ⊗ v_j) )
+
+which covers Mamba2's SSD (q=C, k=B, v=x, a=Δ·A, i=Δ) and mLSTM
+(q, k, v projections; a=log f gate; i=exp input gate, stabilized).
+Intra-chunk work is quadratic in the chunk (Q²·MXU-friendly), inter-chunk
+state is carried by a scan — O(S·Q) total, never O(S²): the sub-quadratic
+long-context path for SSM/hybrid architectures.
+
+Everything is plain jnp (vmap-safe for the FL worker dim, GSPMD-shardable).
+Recurrences run in float32 for stability; block edges cast back.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, maybe, rms_norm, shard_dim
+
+MAMBA_HEAD_DIM = 64
+
+
+# ---------------------------------------------------------------------------
+# chunked decay attention (SSD core)
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) with out[i,j] = sum(a[j+1..i]),
+    -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]              # sum(a[j+1..i])
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def chunked_decay_attention(q, k, v, a, i, *, chunk: int,
+                            initial_state=None, return_state: bool = False):
+    """q: (B,S,H,dk), k: (B,S,H,dk), v: (B,S,H,dv), a: (B,S,H) log-decay,
+    i: (B,S,H) input scale. Returns (y (B,S,H,dv)[, final_state (B,H,dk,dv)]).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(B, nc, chunk, H, dk)
+    kc = k.astype(f32).reshape(B, nc, chunk, H, dk)
+    vc = v.astype(f32).reshape(B, nc, chunk, H, dv)
+    ac = a.astype(f32).reshape(B, nc, chunk, H)
+    ic = i.astype(f32).reshape(B, nc, chunk, H)
+
+    # --- intra-chunk (quadratic in chunk) ---
+    L = jnp.exp(_segsum(jnp.moveaxis(ac, 3, 2)))            # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bnqhd,bnshd->bnhqs", qc, kc)       # (B,nc,H,Q,Q)
+    gated = scores * L * jnp.moveaxis(ic, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bnhqs,bnshv->bnqhv", gated, vc)
+
+    # --- chunk summary states: S_n = Σ_j exp(Σ_{l>j} a) i_j k_j ⊗ v_j ---
+    cum = jnp.cumsum(ac, axis=2)                            # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]                               # (B,nc,1,H)
+    decay_to_end = jnp.exp(total - cum)                     # exp(sum a[j+1..Q])
+    state_n = jnp.einsum("bnqh,bnqhd,bnqhv->bnhdv",
+                         decay_to_end * ic, kc, vc)         # (B,nc,H,dk,dv)
+
+    # --- inter-chunk recurrence over chunk index ---
+    chunk_decay = jnp.exp(total[:, :, 0, :])                # (B,nc,H)
+
+    def scan_body(h_prev, inp):
+        s_n, dec = inp                                      # (B,H,dk,dv),(B,H)
+        h_new = h_prev * dec[..., None, None] + s_n
+        return h_new, h_prev                                # emit state *before* chunk
+
+    h0 = (jnp.zeros((B, H, dk, dv), f32) if initial_state is None
+          else initial_state.astype(f32))
+    h_final, h_before = jax.lax.scan(
+        scan_body, h0,
+        (jnp.moveaxis(state_n, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_before = jnp.moveaxis(h_before, 0, 1)                 # (B,nc,H,dk,dv)
+
+    # --- inter-chunk contribution: q_t · (decay-to-t · h_before) ---
+    decay_from_start = jnp.exp(cum)                         # exp(sum a[1..t])
+    y_inter = jnp.einsum("bnqhd,bnhdv->bnqhv", qc, h_before)
+    y_inter = y_inter * jnp.moveaxis(decay_from_start, 2, 2)[..., None]
+
+    y = (y_intra + y_inter).reshape(B, S, H, dv)
+    if return_state:
+        return y.astype(v.dtype), h_final
+    return y.astype(v.dtype)
+
+
+def decay_attention_step(q, k, v, a, i, state):
+    """Single decode step. q,k: (B,H,dk); v: (B,H,dv); a,i: (B,H);
+    state: (B,H,dk,dv). Returns (y (B,H,dv), new_state)."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    new_state = (state * jnp.exp(a)[..., None, None].astype(f32)
+                 + i[..., None, None].astype(f32) * k[..., :, None] * v[..., None, :])
+    y = jnp.einsum("bhd,bhdv->bhv", q, new_state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(d_model: int, ssm_cfg):
+    d_inner = ssm_cfg.expand * d_model
+    nheads = d_inner // MAMBA_HEAD_DIM
+    return d_inner, nheads
+
+
+def init_mamba2(key, d_model: int, ssm_cfg, tp: int, dtype):
+    d_inner, nheads = mamba2_dims(d_model, ssm_cfg)
+    N, cw = ssm_cfg.state_dim, ssm_cfg.conv_width
+    ks = jax.random.split(key, 8)
+    params = {
+        "w_z": dense_init(ks[0], (d_model, d_inner), d_model, dtype),
+        "w_x": dense_init(ks[1], (d_model, d_inner), d_model, dtype),
+        "w_bc": dense_init(ks[2], (d_model, 2 * N), d_model, dtype),
+        "w_dt": dense_init(ks[3], (d_model, nheads), d_model, dtype),
+        "conv_x": (jax.random.normal(ks[4], (cw, d_inner)) * 0.1).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[5], (cw, 2 * N)) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[6], (d_inner, d_model), d_inner, dtype),
+    }
+    c = maybe(shard_dim(d_inner, tp))
+    h = maybe(shard_dim(nheads, tp))
+    specs = {
+        "w_z": P(None, c), "w_x": P(None, c), "w_bc": P(None, None),
+        "w_dt": P(None, h), "conv_x": P(None, c), "conv_bc": P(None, None),
+        "A_log": P(h), "dt_bias": P(h), "D": P(h),
+        "norm": P(c), "w_out": P(c, None),
+    }
+    return params, specs
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (cw,C).
+    With conv_state (B,cw-1,C): single/streaming step, returns new state."""
+    cw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    windows = jnp.stack([pad[:, i:i + x.shape[1]] for i in range(cw)], axis=-1)
+    out = jnp.einsum("bscw,wc->bsc", windows.astype(jnp.float32),
+                     w.astype(jnp.float32)).astype(x.dtype)
+    out = jax.nn.silu(out)
+    if conv_state is None:
+        return out, None
+    return out, pad[:, -(cw - 1):]
+
+
+def apply_mamba2(params, x, ssm_cfg, *, state=None, conv_state=None,
+                 return_state: bool = False):
+    """x: (B,S,d). Prefill/train when state is None; else decode (S==1).
+    Decode returns (out, (ssm_state, conv_states)); prefill with
+    ``return_state`` returns the same tuple (cache hand-off to decode)."""
+    B, S, d = x.shape
+    d_inner, nheads = params["w_x"].shape[1], params["A_log"].shape[0]
+    N = ssm_cfg.state_dim
+    cw = params["conv_x"].shape[0]
+    z = x @ params["w_z"]
+    xi = x @ params["w_x"]
+    bc = x @ params["w_bc"]
+    dt_raw = x @ params["w_dt"]
+
+    decode = state is not None
+    cs_x = cs_bc = None
+    if decode:
+        cs_x, cs_bc = conv_state
+    elif return_state:
+        # raw pre-conv tails become the streaming conv state
+        cs_x = xi[:, -(cw - 1):]
+        cs_bc = bc[:, -(cw - 1):]
+    xi, cs_x_dec = _causal_conv(xi, params["conv_x"], cs_x if decode else None)
+    bc, cs_bc_dec = _causal_conv(bc, params["conv_bc"], cs_bc if decode else None)
+    if decode:
+        cs_x, cs_bc = cs_x_dec, cs_bc_dec
+    B_, C_ = bc[..., :N], bc[..., N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                           # (H,) negative
+    a = dt * A                                              # (B,S,H) log decay
+    xh = xi.reshape(B, S, nheads, MAMBA_HEAD_DIM)
+    # B_, C_ shared across heads (n_groups=1)
+    k = jnp.broadcast_to(B_[:, :, None, :], (B, S, nheads, N))
+    q = jnp.broadcast_to(C_[:, :, None, :], (B, S, nheads, N))
+
+    if decode:
+        y, new_state = decay_attention_step(
+            q[:, 0], k[:, 0], xh[:, 0], a[:, 0], dt[:, 0], state)
+        y = y[:, None]                                      # (B,1,H,P)
+    elif return_state:
+        y, new_state = chunked_decay_attention(
+            q, k, xh, a, dt, chunk=min(ssm_cfg.chunk_size, S),
+            return_state=True)
+    else:
+        y = chunked_decay_attention(q, k, xh, a, dt, chunk=min(ssm_cfg.chunk_size, S))
+        new_state = None
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), params["norm"])
+    out = y @ params["w_out"]
+    if decode or return_state:
+        return out, (new_state, (cs_x, cs_bc))
+    return out
+
+
+def mamba2_state_shape(batch: int, d_model: int, ssm_cfg):
+    d_inner, nheads = mamba2_dims(d_model, ssm_cfg)
+    cw = ssm_cfg.conv_width
+    return {"ssm": (batch, nheads, ssm_cfg.state_dim, MAMBA_HEAD_DIM),
+            "conv_x": (batch, cw - 1, d_inner),
+            "conv_bc": (batch, cw - 1, 2 * ssm_cfg.state_dim)}
+
+
+def mamba2_state_spec(d_model: int, ssm_cfg, tp: int, data_axes):
+    _, nheads = mamba2_dims(d_model, ssm_cfg)
+    h = maybe(shard_dim(nheads, tp))
+    d_inner, _ = mamba2_dims(d_model, ssm_cfg)
+    c = maybe(shard_dim(d_inner, tp))
+    return {"ssm": P(data_axes, h, None, None),
+            "conv_x": P(data_axes, None, c),
+            "conv_bc": P(data_axes, None, None)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — matrix memory, exp gating, chunked via SSD core
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, ssm_cfg, tp: int, dtype):
+    d_inner = ssm_cfg.expand * d_model
+    H = max(ssm_cfg.num_ssm_heads, 1)
+    dh = d_inner // H
+    ks = jax.random.split(key, 8)
+    c = maybe(shard_dim(d_inner, tp))
+    params = {
+        "w_up": dense_init(ks[0], (d_model, 2 * d_inner), d_model, dtype),
+        "conv": (jax.random.normal(ks[1], (ssm_cfg.conv_width, d_inner)) * 0.1).astype(dtype),
+        # headwise (block-diagonal) q/k/v, as in the released xLSTM
+        "w_q": dense_init(ks[2], (H, dh, dh), dh, dtype),
+        "w_k": dense_init(ks[3], (H, dh, dh), dh, dtype),
+        "w_v": dense_init(ks[4], (H, dh, dh), dh, dtype),
+        "w_i": dense_init(ks[5], (d_inner, H), d_inner, jnp.float32),
+        "w_f": dense_init(ks[6], (d_inner, H), d_inner, jnp.float32),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),   # open forget gates at init
+        "norm": jnp.ones((d_inner,), dtype),
+        "w_down": dense_init(ks[7], (d_inner, d_model), d_inner, dtype),
+    }
+    h = maybe(shard_dim(H, tp))
+    k = maybe(shard_dim(dh, tp)) if h is None else None
+    specs = {
+        "w_up": P(None, None), "conv": P(None, c),
+        "w_q": P(h, None, k), "w_k": P(h, None, k), "w_v": P(h, None, k),
+        "w_i": P(None, None), "w_f": P(None, None), "f_bias": P(None),
+        "norm": P(c), "w_down": P(c, None),
+    }
+    return params, specs
+
+
+def apply_mlstm(params, x, ssm_cfg, *, state=None, conv_state=None,
+                chunk: int = 256, return_state: bool = False):
+    """x: (B,S,d). mLSTM via the decay-attention core with a = logsigmoid(f̃)
+    and i = exp-gate folded into the input scale (stabilized by clamping —
+    the chunked log-space max-stabilizer is applied inside per-chunk)."""
+    B, S, d = x.shape
+    d_inner = params["w_down"].shape[0]
+    H = params["f_bias"].shape[0]
+    dh = d_inner // H
+    up = x @ params["w_up"]
+    xp, z = up[..., :d_inner], up[..., d_inner:]
+
+    decode = state is not None
+    cw = params["conv"].shape[0]
+    cs = conv_state if decode else None
+    if not decode and return_state:
+        tail = xp[:, -(cw - 1):]
+    xc, cs = _causal_conv(xp, params["conv"], cs)
+    if not decode and return_state:
+        cs = tail
+
+    xh = xc.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["w_q"]) * (dh ** -0.5)
+    k = jnp.einsum("bshd,hde->bshe", xh, params["w_k"]) * (dh ** -0.5)
+    v = jnp.einsum("bshd,hde->bshe", xh, params["w_v"])
+    f_t = xc.astype(jnp.float32) @ params["w_f"] + params["f_bias"]
+    i_t = xc.astype(jnp.float32) @ params["w_i"]
+    a = jax.nn.log_sigmoid(f_t)                             # (B,S,H) log decay
+    i = jnp.exp(jnp.clip(i_t, -10.0, 10.0))                 # clamped exp gate
+
+    # augmented value channel tracks the normalizer n_t = Σ decay·i·k-weight
+    v_aug = jnp.concatenate([v.astype(jnp.float32),
+                             jnp.ones((B, S, H, 1), jnp.float32)], axis=-1)
+    if decode:
+        y, new_state = decay_attention_step(
+            q[:, 0], k[:, 0], v_aug[:, 0], a[:, 0], i[:, 0], state)
+        y = y[:, None]
+    elif return_state:
+        y, new_state = chunked_decay_attention(q, k, v_aug, a, i,
+                                               chunk=min(chunk, S),
+                                               return_state=True)
+    else:
+        y = chunked_decay_attention(q, k, v_aug, a, i, chunk=min(chunk, S))
+        new_state = None
+    y, n = y[..., :dh], y[..., dh:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)                    # xLSTM normalizer
+
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = y @ params["w_down"]
+    if decode or return_state:
+        return out, (new_state, cs)
+    return out
+
+
+def mlstm_state_shape(batch: int, d_model: int, ssm_cfg):
+    d_inner = ssm_cfg.expand * d_model
+    H = max(ssm_cfg.num_ssm_heads, 1)
+    dh = d_inner // H
+    return {"ssm": (batch, H, dh, dh + 1),
+            "conv": (batch, ssm_cfg.conv_width - 1, d_inner)}
+
+
+def mlstm_state_spec(d_model: int, ssm_cfg, tp: int, data_axes):
+    d_inner = ssm_cfg.expand * d_model
+    c = maybe(shard_dim(d_inner, tp))
+    H = max(ssm_cfg.num_ssm_heads, 1)
+    dh = d_inner // H
+    k = maybe(shard_dim(dh, tp))
+    return {"ssm": P(data_axes, None, k, None),
+            "conv": P(data_axes, None, c)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — scalar memory, strictly sequential scan
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, num_heads: int, tp: int, dtype):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 4)
+    ffn = int(d_model * 4 / 3)
+    ffn = (ffn + 127) // 128 * 128                          # lane-align
+    f = maybe(shard_dim(ffn, tp))
+    params = {
+        # 4 gates (i, f, z, o) from input and block-diag recurrent R per head
+        "w_gates": dense_init(ks[0], (d_model, 4 * d_model), d_model, dtype),
+        "r_gates": (jax.random.normal(ks[1], (num_heads, dh, 4 * dh)) /
+                    math.sqrt(dh)).astype(dtype),
+        "b_gates": jnp.zeros((4 * d_model,), jnp.float32),
+        "norm": jnp.ones((d_model,), dtype),
+        "ffn_up": dense_init(ks[2], (d_model, 2 * ffn), d_model, dtype),
+        "ffn_down": dense_init(ks[3], (ffn, d_model), ffn, dtype),
+    }
+    specs = {
+        "w_gates": P(None, None), "r_gates": P(None, None, None),
+        "b_gates": P(None), "norm": P(None),
+        "ffn_up": P(None, f), "ffn_down": P(f, None),
+    }
+    return params, specs
+
+
+def _slstm_gates(g, c, n, m, num_heads):
+    """Gate math given pre-activations g: (B, 4d). The stabilizer m is a
+    pure numerical device (h is exactly invariant to it), so it carries
+    stop_gradient — gradients stay exact and the hand-written VJP below
+    never differentiates through the max."""
+    B = g.shape[0]
+    d = g.shape[1] // 4
+    dh = d // num_heads
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    gi_h = gi.reshape(B, num_heads, dh)
+    gf_h = gf.reshape(B, num_heads, dh)
+    fi = jnp.max(gf_h, axis=-1) + m                         # (B,H)
+    ii = jnp.max(gi_h, axis=-1)
+    m_new = jax.lax.stop_gradient(jnp.maximum(fi, ii))
+    i_p = jnp.exp(gi_h - m_new[..., None]).reshape(B, d)
+    f_p = jnp.exp(gf_h + m[:, :, None] - m_new[:, :, None]).reshape(B, d)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return c_new, n_new, h_new, m_new
+
+
+def _slstm_cell(params, num_heads, x_t, carry):
+    """One sLSTM step. x_t: (B, 4d) pre-activations from the input path;
+    carry: (c, n, h, m) each (B, d) except m (B, H)."""
+    c, n, h, m = carry
+    B, d = h.shape
+    dh = d // num_heads
+    hh = h.reshape(B, num_heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh.astype(jnp.float32),
+                     params["r_gates"].astype(jnp.float32)).reshape(B, 4 * d)
+    g = x_t + rec + params["b_gates"]
+    c_new, n_new, h_new, m_new = _slstm_gates(g, c, n, m, num_heads)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+# --- temporal scan with a hand-written VJP -----------------------------------
+#
+# Autodiff of the scan accumulates the recurrent-matrix cotangent
+# dR = Σ_t h_tᵀ dg_t INSIDE the backward loop; with batch-sharded h that
+# contraction psums 17 MiB per TIME STEP (4096× per layer — §Perf H12,
+# 1.6 TB/step for xlstm-1.3b). Here the backward loop accumulates the
+# BATCH-EXPANDED outer product (B, H, dh, 4dh) locally and the batch
+# reduction happens ONCE after the loop.
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _slstm_scan(r_gates, b_gates, pre, carry0, num_heads):
+    def body(cr, x_t):
+        return _slstm_cell({"r_gates": r_gates, "b_gates": b_gates},
+                           num_heads, x_t, cr)
+    carry, hs = jax.lax.scan(body, carry0, pre)
+    return carry, hs
+
+
+def _slstm_scan_fwd(r_gates, b_gates, pre, carry0, num_heads):
+    def body(cr, x_t):
+        new_cr, h = _slstm_cell({"r_gates": r_gates, "b_gates": b_gates},
+                                num_heads, x_t, cr)
+        return new_cr, (h, cr)                     # save carry per step
+    carry, (hs, carries) = jax.lax.scan(body, carry0, pre)
+    return (carry, hs), (r_gates, b_gates, pre, carries)
+
+
+def _slstm_scan_bwd(num_heads, res, ct):
+    r_gates, b_gates, pre, carries = res
+    (d_carry_final, d_hs) = ct
+    B, d = pre.shape[1], pre.shape[2] // 4
+    H = num_heads
+    dh = d // H
+    r32 = r_gates.astype(jnp.float32)
+
+    def step(acc, inp):
+        (dc, dn, dhh, dm), dr_acc, db_acc = acc
+        x_t, cr_t, dh_out_t = inp
+        c_p, n_p, h_p, m_p = cr_t
+
+        def f(g, c_, n_):
+            c2, n2, h2, _ = _slstm_gates(g, c_, n_, m_p, num_heads)
+            return c2, n2, h2
+        hh_p = h_p.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh_p.astype(jnp.float32),
+                         r32).reshape(B, 4 * d)
+        g = x_t + rec + b_gates
+        _, vjp = jax.vjp(f, g, c_p, n_p)
+        dg, dc_p, dn_p = vjp((dc, dn, dhh + dh_out_t))
+        dg_h = dg.reshape(B, H, 4 * dh)
+        # recurrent path: local, batch-expanded dR (reduced over B *after*
+        # the loop — keeps the per-step loop collective-free)
+        dh_p = jnp.einsum("bhe,hde->bhd", dg_h, r32).reshape(B, d)
+        dr_step = jnp.einsum("bhd,bhe->bhde", hh_p.astype(jnp.float32), dg_h)
+        new_acc = ((dc_p, dn_p, dh_p, jnp.zeros_like(dm)),
+                   dr_acc + dr_step, db_acc + dg)
+        return new_acc, dg
+
+    zeros_m = jnp.zeros_like(d_carry_final[3])
+    acc0 = ((d_carry_final[0], d_carry_final[1], d_carry_final[2], zeros_m),
+            jnp.zeros((B, H, dh, 4 * dh), jnp.float32),
+            jnp.zeros((B, 4 * d), jnp.float32))
+    (d_carry0, dr_b, db_b), d_pre = jax.lax.scan(
+        step, acc0, (pre, carries, d_hs), reverse=True)
+    d_r = jnp.sum(dr_b, axis=0).astype(r_gates.dtype)   # ONE batch reduction
+    d_b = jnp.sum(db_b, axis=0).astype(b_gates.dtype)
+    return d_r, d_b, d_pre, d_carry0
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def apply_slstm(params, x, num_heads: int, *, carry=None,
+                return_state: bool = False):
+    """x: (B,S,d). Sequential over S (lax.scan). Returns out (+ carry when
+    streaming or ``return_state``)."""
+    B, S, d = x.shape
+    decode = carry is not None or return_state
+    pre = (x @ params["w_gates"]).astype(jnp.float32)       # (B,S,4d)
+    if carry is None:
+        z32 = jnp.zeros((B, d), jnp.float32)
+        carry = (z32, z32, z32, jnp.zeros((B, num_heads), jnp.float32))
+    else:
+        carry = jax.tree.map(lambda a: a.astype(jnp.float32), carry)
+
+    carry, hs = _slstm_scan(params["r_gates"], params["b_gates"],
+                            jnp.moveaxis(pre, 1, 0), carry, num_heads)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # (B,S,d)
+    y = rms_norm(y, params["norm"])
+    u = y @ params["ffn_up"]
+    ffn = params["ffn_down"].shape[0]
+    y = (jax.nn.gelu(u[..., :ffn]) * u[..., ffn:]) @ params["ffn_down"]
+    if decode:
+        return y, carry
+    return y
+
+
+def slstm_state_shape(batch: int, d_model: int, num_heads: int):
+    return {"c": (batch, d_model), "n": (batch, d_model),
+            "h": (batch, d_model), "m": (batch, num_heads)}
+
+
+def slstm_state_spec(data_axes):
+    return {"c": P(data_axes, None), "n": P(data_axes, None),
+            "h": P(data_axes, None), "m": P(data_axes, None)}

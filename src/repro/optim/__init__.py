@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, clip_grads,
+                                    init_opt, opt_update, sgd_init, sgd_update)

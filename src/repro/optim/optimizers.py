@@ -1,0 +1,92 @@
+"""Optimizers. SGD(momentum) matches the paper's §IV hyperparameters
+(lr=0.01, momentum=0.5, dampening=0, weight_decay=0, nesterov=False) with
+PyTorch SGD semantics (buf = μ·buf + (1−damp)·g ; p −= lr·buf). AdamW is
+the LLM-config default. States mirror params (same sharding specs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+# -- SGD (paper) -------------------------------------------------------------
+
+def sgd_init(params, dtype=jnp.float32):
+    return {"momentum": jax.tree.map(lambda p: jnp.zeros_like(p, dtype),
+                                     params)}
+
+
+def sgd_update(params, grads, state, tc: TrainConfig):
+    def upd(p, g, buf):
+        g = g.astype(jnp.float32)
+        if tc.weight_decay:
+            g = g + tc.weight_decay * p.astype(jnp.float32)
+        bdt = buf.dtype
+        buf = (tc.momentum * buf.astype(jnp.float32) + (1.0 - tc.dampening) * g)
+        step = (g + tc.momentum * buf) if tc.nesterov else buf
+        return ((p.astype(jnp.float32) - tc.lr * step).astype(p.dtype),
+                buf.astype(bdt))
+
+    flat = jax.tree.map(upd, params, grads, state["momentum"])
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_buf = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"momentum": new_buf}
+
+
+# -- AdamW -------------------------------------------------------------------
+
+def adamw_init(params, dtype=jnp.float32):
+    z = lambda p: jnp.zeros_like(p, dtype)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, tc: TrainConfig):
+    count = state["count"] + 1
+    b1, b2 = tc.adam_b1, tc.adam_b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def bc(c, x):
+        """count may carry a leading worker dim — broadcast to x's rank."""
+        return c.reshape(c.shape + (1,) * (x.ndim - c.ndim)) if c.ndim else c
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        mdt, vdt = m.dtype, v.dtype
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        step = (m / bc(c1, m)) / (jnp.sqrt(v / bc(c2, v)) + tc.adam_eps)
+        if tc.weight_decay:
+            step = step + tc.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - tc.lr * step).astype(p.dtype),
+                m.astype(mdt), v.astype(vdt))
+
+    flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    pick = lambda i: jax.tree.map(lambda t: t[i], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "count": count}
+
+
+# -- dispatch ------------------------------------------------------------------
+
+def init_opt(params, tc: TrainConfig):
+    dt = jnp.dtype(tc.opt_dtype)
+    return (sgd_init(params, dt) if tc.optimizer == "sgd"
+            else adamw_init(params, dt))
+
+
+def opt_update(params, grads, state, tc: TrainConfig):
+    if tc.optimizer == "sgd":
+        return sgd_update(params, grads, state, tc)
+    return adamw_update(params, grads, state, tc)
+
+
+def clip_grads(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(jnp.sqrt(sq), 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)

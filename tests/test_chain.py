@@ -1,0 +1,101 @@
+"""Blockchain substrate: ledger integrity, contract (Algorithm 1)
+correctness + conservation properties, IPFS content addressing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.chain.contract import ContractError, TrustContract
+from repro.chain.ipfs import IPFSStore
+from repro.chain.ledger import Ledger
+
+
+def test_ledger_chain_verifies_and_detects_tampering():
+    led = Ledger()
+    led.append_block([{"type": "x", "v": 1}])
+    led.append_block([{"type": "y", "v": 2}])
+    assert led.verify_chain()
+    led.blocks[1].transactions[0]["v"] = 999       # tamper
+    assert not led.verify_chain()
+
+
+def test_ledger_randomness_deterministic():
+    a, b = Ledger(), Ledger()
+    a.append_block([{"t": 1}], timestamp=1.0)
+    b.append_block([{"t": 1}], timestamp=1.0)
+    assert a.randomness(3) == b.randomness(3)
+    assert a.randomness(3) != a.randomness(4)
+
+
+def test_ipfs_roundtrip_and_tamper_detection():
+    store = IPFSStore()
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": jnp.ones((5,), jnp.bfloat16)}
+    cid = store.put_tree(tree)
+    leaves = store.get_leaves(cid)
+    np.testing.assert_allclose(leaves[1], tree["w"])   # dict order: b, w
+    store.tamper(cid, b"garbage")
+    with pytest.raises(ValueError):
+        store.get_leaves(cid)
+
+
+def test_contract_algorithm1_steps():
+    led = Ledger()
+    c = TrustContract(led, requester_deposit=100.0, worker_stake=10.0,
+                      penalty_pct=50.0, trust_threshold=0.5, top_k=2)
+    for w in ["w0", "w1", "w2"]:
+        c.join(w)
+    pens = c.settle_round(0, {"w0": 0.9, "w1": 0.4, "w2": 0.6}, "cid0")
+    # Pen(w) = F·P/100 = 10·50/100 = 5 for the one bad worker
+    assert pens == {"w1": 5.0}
+    assert c.workers["w1"].stake == 5.0
+    assert c.requester_balance == 5.0
+    payouts = c.finalize()
+    # refunds: w0 10, w1 5, w2 10 ; rewards: top-2 (w0, w2) split 100
+    assert payouts["w0"] == 10.0 + 50.0
+    assert payouts["w1"] == 5.0
+    assert payouts["w2"] == 10.0 + 50.0
+    assert led.verify_chain()
+
+
+def test_contract_rejects_unknown_and_double_finalize():
+    c = TrustContract(Ledger(), requester_deposit=10, worker_stake=1,
+                      penalty_pct=10, trust_threshold=0.5, top_k=1)
+    c.join("a")
+    with pytest.raises(ContractError):
+        c.settle_round(0, {"ghost": 1.0})
+    c.finalize()
+    with pytest.raises(ContractError):
+        c.finalize()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_workers=st.integers(1, 12),
+    deposit=st.floats(1.0, 1e4),
+    stake=st.floats(0.1, 100.0),
+    pct=st.floats(0.0, 100.0),
+    threshold=st.floats(0.0, 1.0),
+    k=st.integers(1, 12),
+    rounds=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_contract_value_conservation(n_workers, deposit, stake, pct,
+                                     threshold, k, rounds, seed):
+    """Property: total value (pool + requester + stakes + balances) is
+    conserved through any score sequence; stakes never go negative."""
+    rng = np.random.default_rng(seed)
+    c = TrustContract(Ledger(), requester_deposit=deposit, worker_stake=stake,
+                      penalty_pct=pct, trust_threshold=threshold, top_k=k)
+    for w in range(n_workers):
+        c.join(f"w{w}")
+    total0 = c.total_value()
+    for r in range(rounds):
+        scores = {f"w{w}": float(rng.random()) for w in range(n_workers)}
+        c.settle_round(r, scores)
+        assert abs(c.total_value() - total0) < 1e-6 * max(total0, 1)
+        assert all(a.stake >= -1e-9 for a in c.workers.values())
+    c.finalize()
+    assert abs(c.total_value() - total0) < 1e-6 * max(total0, 1)
+    # after finalize all stakes are zero (everything refunded/penalized)
+    assert all(a.stake == 0.0 for a in c.workers.values())

@@ -1,0 +1,121 @@
+"""Gossip exchange, reputation book, and client-selection strategies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.chain.ipfs import IPFSStore
+from repro.chain.ledger import Ledger
+from repro.core.gossip import ClusterExchange
+from repro.core.reputation import ReputationBook, reputation_cluster_weights
+from repro.core import selection
+
+
+def _tree(key, scale=1.0):
+    return {"a": scale * jax.random.normal(key, (4, 8)),
+            "b": scale * jax.random.normal(jax.random.fold_in(key, 1), (16,))}
+
+
+# -- gossip -------------------------------------------------------------------
+
+def test_gossip_publish_fetch_roundtrip():
+    ex = ClusterExchange(IPFSStore(), Ledger(), num_clusters=3)
+    agg = _tree(jax.random.PRNGKey(0))
+    cid = ex.publish(0, 0, agg)
+    out = ex.fetch(0, 0, agg)
+    for k in agg:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(agg[k]),
+                                   rtol=1e-6)
+    txs = ex.round_transactions(0)
+    assert txs == [{"type": "cluster_model", "round": 0, "cluster": 0,
+                    "cid": cid}]
+
+
+def test_gossip_merge_weighted_by_trust():
+    ex = ClusterExchange(IPFSStore(), Ledger(), num_clusters=2)
+    own = _tree(jax.random.PRNGKey(0))
+    peer = _tree(jax.random.PRNGKey(1))
+    ex.publish(0, 0, own)
+    ex.publish(0, 1, peer)
+    merged = ex.merge(0, own_cluster=0, own_aggregate=own,
+                      peer_trust=[0.0, 1.0], self_weight=0.5)
+    for k in own:
+        expect = 0.5 * np.asarray(own[k]) + 0.5 * np.asarray(peer[k])
+        np.testing.assert_allclose(np.asarray(merged[k], np.float32), expect,
+                                   rtol=1e-4, atol=1e-5)
+    # zero-trust peers are ignored entirely
+    merged2 = ex.merge(0, 1, peer, peer_trust=[0.0, 1.0])
+    for k in own:
+        np.testing.assert_allclose(np.asarray(merged2[k]),
+                                   np.asarray(peer[k]), rtol=1e-6)
+
+
+def test_gossip_merge_without_peers_is_identity():
+    ex = ClusterExchange(IPFSStore(), Ledger(), num_clusters=2)
+    own = _tree(jax.random.PRNGKey(0))
+    ex.publish(0, 0, own)
+    out = ex.merge(0, 0, own, peer_trust=[1.0, 1.0])
+    assert out is own
+
+
+# -- reputation ----------------------------------------------------------------
+
+def test_reputation_ema_and_penalties():
+    book = ReputationBook(4, ema=0.5, prior=0.5)
+    book.update([1.0, 0.0, 0.5, 0.5], penalized=[1])
+    assert book.scores[0] == pytest.approx(0.75)
+    assert book.scores[1] == pytest.approx(0.25)
+    w = book.leader_weights([0, 1, 2, 3])
+    assert w[0] == max(w)           # best rep leads most often
+    assert w[1] == min(w)           # penalized worker rarely
+    np.testing.assert_allclose(w.sum(), 1.0)
+
+
+def test_reputation_election_deterministic():
+    book = ReputationBook(4)
+    book.update([0.9, 0.1, 0.5, 0.5], penalized=[1])
+    assert book.elect([0, 1, 2, 3], rng_seed=42) == \
+        book.elect([0, 1, 2, 3], rng_seed=42)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rounds=st.integers(1, 20), seed=st.integers(0, 100))
+def test_reputation_weights_valid_distribution(rounds, seed):
+    rng = np.random.default_rng(seed)
+    book = ReputationBook(6)
+    for r in range(rounds):
+        book.update(rng.random(6), penalized=rng.choice(6, size=1))
+    w = book.leader_weights(range(6))
+    assert np.all(w > 0) and abs(w.sum() - 1.0) < 1e-9
+    cw = reputation_cluster_weights(book, 2, 3)
+    assert cw.shape == (2,) and abs(cw.sum() - 1.0) < 1e-9
+
+
+# -- selection ------------------------------------------------------------------
+
+def test_select_random_k_and_deterministic():
+    m1 = selection.select_random(10, 4, seed=0, round_index=3)
+    m2 = selection.select_random(10, 4, seed=0, round_index=3)
+    assert (m1 == m2).all() and m1.sum() == 4
+    m3 = selection.select_random(10, 4, seed=0, round_index=4)
+    assert not (m1 == m3).all()
+
+
+def test_select_by_reputation_prefers_good_workers():
+    book = ReputationBook(8)
+    book.update([0.9, 0.9, 0.9, 0.9, 0.1, 0.1, 0.1, 0.1])
+    hits = np.zeros(8)
+    for r in range(20):
+        hits += selection.select_by_reputation(book, 4, seed=0,
+                                               round_index=r)
+    assert hits[:4].sum() > hits[4:].sum()
+    assert hits[4:].sum() > 0          # exploration keeps everyone alive
+
+
+def test_select_per_cluster_balanced():
+    m = selection.select_per_cluster(12, num_clusters=3, k_per_cluster=2,
+                                     seed=0, round_index=0)
+    assert m.sum() == 6
+    for c in range(3):
+        assert m[c * 4:(c + 1) * 4].sum() == 2

@@ -1,0 +1,125 @@
+"""Trust scoring + aggregation invariants (hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FederationConfig
+from repro.core import async_agg, hierarchy, trust
+
+
+def _updates(key, W, shapes=((8, 16), (32,))):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, (W,) + s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def test_scores_in_unit_interval_and_penalize_flipped():
+    fed = FederationConfig()
+    key = jax.random.PRNGKey(0)
+    W = 8
+    upd = _updates(key, W)
+    # worker 3 flips the sign of its update (classic poisoning)
+    upd = {k: v.at[3].set(-3.0 * v[3]) for k, v in upd.items()}
+    losses = jnp.ones((W,))
+    stats = trust.update_stats(upd, losses, losses)
+    s = trust.scores_from_stats(stats, fed)
+    assert s.shape == (W,)
+    assert float(jnp.min(s)) >= 0.0 and float(jnp.max(s)) <= 1.0
+    assert float(s[3]) == float(jnp.min(s))          # attacker scored worst
+
+
+def test_free_rider_scores_near_zero():
+    fed = FederationConfig()
+    upd = _updates(jax.random.PRNGKey(1), 6)
+    upd = {k: v.at[0].set(0.0) for k, v in upd.items()}   # free rider
+    losses = jnp.ones((6,))
+    s = trust.scores_from_stats(trust.update_stats(upd, losses, losses), fed)
+    assert float(s[0]) < 0.15
+
+
+@settings(max_examples=25, deadline=None)
+@given(w=st.integers(2, 16), seed=st.integers(0, 1000),
+       soft=st.booleans())
+def test_trust_weights_normalized(w, seed, soft):
+    fed = FederationConfig(soft_trust_weighting=soft)
+    scores = jax.random.uniform(jax.random.PRNGKey(seed), (w,))
+    wt = trust.trust_weights(scores, fed)
+    np.testing.assert_allclose(float(jnp.sum(wt)), 1.0, rtol=1e-5)
+    assert float(jnp.min(wt)) >= 0.0
+
+
+def test_trust_weights_all_filtered_falls_back_uniform():
+    fed = FederationConfig(trust_threshold=2.0)   # nothing passes
+    wt = trust.trust_weights(jnp.array([0.1, 0.5, 0.9]), fed)
+    np.testing.assert_allclose(np.asarray(wt), np.ones(3) / 3, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_two_stage_equals_fused_equals_head_gather(seed):
+    """The three aggregation topologies are value-identical."""
+    fed = FederationConfig(num_clusters=4, workers_per_cluster=4)
+    W = 16
+    key = jax.random.PRNGKey(seed)
+    upd = _updates(key, W)
+    wt = jax.random.uniform(jax.random.fold_in(key, 1), (W,))
+    wt = wt / jnp.sum(wt)
+    a = hierarchy.aggregate(upd, wt, fed)
+    b = hierarchy.aggregate_fused(upd, wt)
+    c = hierarchy.aggregate_head_gather(upd, wt, fed)
+    for k in upd:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(c[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_aggregate_unbiased_uniform_mean():
+    """Uniform weights must reproduce the plain FedAvg mean."""
+    fed = FederationConfig(num_clusters=2, workers_per_cluster=3)
+    W = 6
+    upd = _updates(jax.random.PRNGKey(3), W)
+    wt = jnp.ones((W,)) / W
+    agg = hierarchy.aggregate(upd, wt, fed)
+    for k in upd:
+        np.testing.assert_allclose(np.asarray(agg[k]),
+                                   np.asarray(jnp.mean(upd[k], axis=0)),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_rotate_heads_is_permutation():
+    fed = FederationConfig(num_clusters=2, workers_per_cluster=4)
+    x = {"p": jnp.arange(8.0)[:, None] * jnp.ones((8, 3))}
+    rolled = hierarchy.rotate_heads(x, jnp.array([1, 3]))
+    assert sorted(np.asarray(rolled["p"])[:, 0].tolist()) == list(range(8))
+
+
+def test_staleness_discount_monotone():
+    s = trust.staleness_discount(jnp.array([0, 1, 2, 5, 10]), 0.5)
+    assert np.all(np.diff(np.asarray(s)) < 0)
+    np.testing.assert_allclose(float(s[0]), 1.0)
+
+
+def test_async_round_flushes_and_accumulates():
+    fed = FederationConfig(num_clusters=2, workers_per_cluster=2,
+                           async_mode=True)
+    W = 4
+    upd = _updates(jax.random.PRNGKey(4), W, shapes=((5,),))
+    state = async_agg.init_async_state(upd, W)
+    scores = jnp.ones((W,)) * 0.9
+    mask = jnp.array([1, 1, 0, 0])
+    agg, state1, wts = async_agg.async_round(upd, scores, mask, state, fed)
+    # absent workers keep accumulating, staleness grows
+    assert np.asarray(state1.staleness).tolist() == [0, 0, 1, 1]
+    np.testing.assert_allclose(np.asarray(state1.pending["p0"][0]), 0.0)
+    np.testing.assert_allclose(np.asarray(state1.pending["p0"][2]),
+                               np.asarray(upd["p0"][2]), rtol=1e-6)
+    # absent workers get zero weight this round
+    assert float(wts[2]) == 0.0 and float(wts[3]) == 0.0
+    # when worker 2 arrives next round, its pending + fresh update flush
+    upd2 = _updates(jax.random.PRNGKey(5), W, shapes=((5,),))
+    mask2 = jnp.array([0, 0, 1, 1])
+    agg2, state2, wts2 = async_agg.async_round(upd2, scores, mask2, state1, fed)
+    assert np.asarray(state2.staleness).tolist() == [1, 1, 0, 0]
+    np.testing.assert_allclose(np.asarray(state2.pending["p0"][2]), 0.0)
