@@ -36,6 +36,7 @@ def run(rounds: int = 50, samples: int = 4096, W: int = 8, n_bad: int = 2,
             proto.fed = dataclasses.replace(proto.fed,
                                             soft_trust_weighting=False)
         log = run_rounds(proto, ds, rounds, eval_every=rounds)
+        proto.flush()   # pipelined driver: settle the trailing round first
         pen = {w: proto.contract.workers[f"worker-{w}"].penalized_rounds
                for w in range(W)}
         proto.finalize()

@@ -34,6 +34,7 @@ def run(trust_on: bool) -> dict:
     for _ in range(40):
         rec = proto.run_round(ds.round_batches(32))
     acc = proto.evaluate(ds.eval_batch(512))["accuracy"]
+    proto.flush()   # pipelined driver: settle the trailing round first
     stakes = {w: proto.contract.workers[f"worker-{w}"].stake for w in range(8)}
     proto.finalize()
     return {"acc": acc, "scores": rec.scores, "stakes": stakes}

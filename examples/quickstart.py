@@ -25,11 +25,15 @@ def main() -> None:
         rec = proto.run_round(ds.round_batches(64))
         if (round_index + 1) % 10 == 0:
             metrics = proto.evaluate(eval_batch)
+            # the pipelined driver settles a round during the next round's
+            # device step, so the freshest settled cid is the previous one
+            settled = next((r for r in reversed(proto.history) if r.settled),
+                           rec)
             print(f"round {round_index + 1:3d}  "
                   f"acc={metrics['accuracy']:.3f}  "
                   f"loss={metrics['loss']:.3f}  "
                   f"trust={rec.scores.round(2).tolist()}  "
-                  f"heads={rec.heads}  cid={rec.model_cid[:12]}…")
+                  f"heads={rec.heads}  cid={settled.model_cid[:12]}…")
 
     payouts = proto.finalize()
     print("\nledger verified:", proto.ledger.verify_chain(),

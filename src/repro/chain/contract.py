@@ -11,31 +11,146 @@ Steps (paper §III.E):
   7. Collected penalties transfer to the requester.
   8. TopKWorkers split the reward pool: Reward(w) = R_total / k.
 
-Every state transition emits a transaction; the ledger stores them in the
-round's block, so balances are fully auditable/replayable.
+Array-native state: accounts are a struct-of-arrays (numpy ``stake`` /
+``balance`` / ``penalized_rounds`` / ``score_sum`` / ``score_count``
+vectors indexed by integer worker id), so a round settles in O(1) Python
+ops and O(W) vectorized numpy — ``settle_round_batch`` computes BadWorkers,
+penalties, and the requester transfer without a per-worker loop, and
+``finalize`` ranks top-k via ``argpartition``. Each settlement block
+commits to the round's canonically-encoded per-worker records through a
+Merkle root (see ``chain.ledger``), so balances stay fully auditable —
+per-worker via O(log W) proofs (``settlement_proof``) rather than per-worker
+embedded transactions.
+
+The legacy scalar API (``join`` / ``settle_round`` with a score dict /
+dict-like ``workers`` access) is kept as a thin wrapper over the batch
+path, so Algorithm 1 semantics are provably unchanged (see the
+batch-vs-scalar equivalence property test in ``tests/test_chain.py``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Mapping, Optional, Tuple
 
-from repro.chain.ledger import Ledger
+import numpy as np
+
+from repro.chain.ledger import Ledger, MerkleTree
 
 
 class ContractError(RuntimeError):
     pass
 
 
-@dataclass
+_RECORD_DTYPE = np.dtype([("round", "<i8"), ("worker", "<i8"),
+                          ("score", "<f8"), ("penalty", "<f8"),
+                          ("stake_after", "<f8")])
+
+
+def encode_settlement_records(round_index: int, worker_ids: np.ndarray,
+                              scores: np.ndarray, penalties: np.ndarray,
+                              stakes_after: np.ndarray) -> List[bytes]:
+    """Canonical fixed-width binary encoding of per-worker settlement
+    records — the Merkle leaves committed by a settlement block. Built
+    vectorized (one structured array, sliced into rows)."""
+    n = len(worker_ids)
+    rec = np.empty(n, dtype=_RECORD_DTYPE)
+    rec["round"] = round_index
+    rec["worker"] = worker_ids
+    rec["score"] = scores
+    rec["penalty"] = penalties
+    rec["stake_after"] = stakes_after
+    buf = rec.tobytes()
+    step = _RECORD_DTYPE.itemsize
+    return [buf[i * step:(i + 1) * step] for i in range(n)]
+
+
+def decode_settlement_record(leaf: bytes) -> Dict[str, float]:
+    rec = np.frombuffer(leaf, dtype=_RECORD_DTYPE)[0]
+    return {"round": int(rec["round"]), "worker": int(rec["worker"]),
+            "score": float(rec["score"]), "penalty": float(rec["penalty"]),
+            "stake_after": float(rec["stake_after"])}
+
+
 class WorkerAccount:
-    stake: float                     # remaining deposit D(w)
-    balance: float = 0.0             # rewards + refunds received
-    penalized_rounds: int = 0
-    scores: List[float] = field(default_factory=list)
+    """Read/write *view* onto one worker's slice of the struct-of-arrays
+    state — preserves the legacy ``contract.workers[wid].stake`` API."""
+
+    __slots__ = ("_c", "_i")
+
+    def __init__(self, contract: "TrustContract", index: int) -> None:
+        self._c = contract
+        self._i = index
+
+    @property
+    def stake(self) -> float:
+        return float(self._c.stake[self._i])
+
+    @stake.setter
+    def stake(self, v: float) -> None:
+        self._c.stake[self._i] = v
+
+    @property
+    def balance(self) -> float:
+        return float(self._c.balance[self._i])
+
+    @balance.setter
+    def balance(self, v: float) -> None:
+        self._c.balance[self._i] = v
+
+    @property
+    def penalized_rounds(self) -> int:
+        return int(self._c.penalized_rounds[self._i])
+
+    @property
+    def scores(self) -> List[float]:
+        """Score history of this worker across settled rounds (only rounds
+        the worker was scored in)."""
+        return self._c._worker_scores(self._i)
+
+
+class _WorkersView(Mapping):
+    """Mapping façade over the array state: accepts integer worker ids or
+    registered string names (``"worker-3"``), yields account views."""
+
+    def __init__(self, contract: "TrustContract") -> None:
+        self._c = contract
+
+    def _index(self, key) -> int:
+        if isinstance(key, (int, np.integer)):
+            if not 0 <= int(key) < self._c.num_workers:
+                raise KeyError(key)
+            return int(key)
+        try:
+            return self._c._index[key]
+        except KeyError:
+            raise KeyError(key) from None
+
+    def __getitem__(self, key) -> WorkerAccount:
+        return WorkerAccount(self._c, self._index(key))
+
+    def __contains__(self, key) -> bool:
+        try:
+            self._index(key)
+            return True
+        except KeyError:
+            return False
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._c._names)
+
+    def __len__(self) -> int:
+        return self._c.num_workers
+
+    def values(self):
+        return (WorkerAccount(self._c, i)
+                for i in range(self._c.num_workers))
+
+    def items(self):
+        return ((n, WorkerAccount(self._c, i))
+                for i, n in enumerate(self._c._names))
 
 
 class TrustContract:
-    """One deployed FL task. Mirrors Algorithm 1 exactly."""
+    """One deployed FL task. Mirrors Algorithm 1 exactly — array-native."""
 
     def __init__(self, ledger: Ledger, *, requester_deposit: float,
                  worker_stake: float, penalty_pct: float,
@@ -49,87 +164,236 @@ class TrustContract:
         self.k = top_k
         self.reward_pool = requester_deposit
         self.requester_balance = 0.0
-        self.workers: Dict[str, WorkerAccount] = {}
-        self.pending: List[dict] = [{"type": "deploy", "deposit": requester_deposit,
+        # struct-of-arrays account state (amortized-doubling capacity)
+        self.stake = np.zeros(0, np.float64)
+        self.balance = np.zeros(0, np.float64)
+        self.penalized_rounds = np.zeros(0, np.int64)
+        self.score_sum = np.zeros(0, np.float64)
+        self.score_count = np.zeros(0, np.int64)
+        self._names: List[str] = []
+        self._index: Dict[str, int] = {}
+        # audit trails: append-only settlement log (score history) plus
+        # round → (block, settled ids) for O(log W) settlement proofs
+        self._score_log: List[Tuple[np.ndarray, np.ndarray]] = []
+        self._round_blocks: Dict[int, int] = {}
+        self._round_ids: Dict[int, np.ndarray] = {}
+        self.pending: List[dict] = [{"type": "deploy",
+                                     "deposit": requester_deposit,
                                      "F": worker_stake, "P": penalty_pct,
                                      "T": trust_threshold, "k": top_k}]
         self.closed = False
 
     # -- enrollment ---------------------------------------------------------
 
-    def join(self, worker_id: str) -> None:
+    @property
+    def num_workers(self) -> int:
+        return len(self._names)
+
+    @property
+    def workers(self) -> _WorkersView:
+        return _WorkersView(self)
+
+    def _grow(self, n: int) -> None:
+        old = len(self.stake)
+        for attr in ("stake", "balance", "penalized_rounds",
+                     "score_sum", "score_count"):
+            arr = getattr(self, attr)
+            out = np.zeros(old + n, arr.dtype)
+            out[:old] = arr
+            setattr(self, attr, out)
+
+    def join_batch(self, count: int, *, name_prefix: str = "worker-",
+                   start: Optional[int] = None) -> np.ndarray:
+        """Enroll ``count`` workers in one vectorized transition (O(count)
+        numpy, O(count) name registration). Returns their integer ids.
+        The whole batch is a single on-chain join transaction."""
         if self.closed:
             raise ContractError("task closed")
-        if worker_id in self.workers:
-            raise ContractError(f"{worker_id} already joined")
-        self.workers[worker_id] = WorkerAccount(stake=self.F)
-        self.pending.append({"type": "join", "worker": worker_id, "stake": self.F})
+        if count <= 0:
+            raise ContractError("join_batch needs a positive count")
+        base = self.num_workers
+        start = base if start is None else start
+        names = [f"{name_prefix}{start + i}" for i in range(count)]
+        dup = [n for n in names if n in self._index]
+        if dup:
+            raise ContractError(f"already joined: {dup[:3]}")
+        self._grow(count)
+        self.stake[base:] = self.F
+        for i, n in enumerate(names):
+            self._index[n] = base + i
+        self._names.extend(names)
+        self.pending.append({"type": "join_batch", "count": count,
+                             "first_id": base, "stake_each": self.F})
+        return np.arange(base, base + count)
 
-    # -- per-round settlement (Alg. 1 steps 3-7) -----------------------------
+    def join(self, worker_id: str) -> None:
+        """Legacy scalar enrollment (thin wrapper: one-row batch)."""
+        if self.closed:
+            raise ContractError("task closed")
+        if worker_id in self._index:
+            raise ContractError(f"{worker_id} already joined")
+        base = self.num_workers
+        self._grow(1)
+        self.stake[base] = self.F
+        self._index[worker_id] = base
+        self._names.append(worker_id)
+        self.pending.append({"type": "join", "worker": worker_id,
+                             "stake": self.F})
+
+    def worker_id(self, name: str) -> int:
+        return self._index[name]
+
+    def worker_name(self, index: int) -> str:
+        return self._names[index]
+
+    # -- per-round settlement (Alg. 1 steps 3-7), batch path ------------------
+
+    def settle_round_batch(self, round_index: int, scores: np.ndarray,
+                           worker_ids: Optional[np.ndarray] = None,
+                           model_cid: str = "") -> np.ndarray:
+        """Vectorized settlement: BadWorkers mask, stake-capped penalties,
+        requester transfer, and the Merkle-committed round block — no
+        per-worker Python loop. ``worker_ids`` defaults to all workers (the
+        common full-participation round). Returns the (len(scores),) penalty
+        vector aligned with ``scores``."""
+        if self.closed:
+            raise ContractError("task closed")
+        s = np.asarray(scores, np.float64).reshape(-1)
+        if worker_ids is None:
+            if len(s) != self.num_workers:
+                raise ContractError(
+                    f"expected {self.num_workers} scores, got {len(s)}")
+            ids = np.arange(self.num_workers)
+        else:
+            ids = np.asarray(worker_ids, np.int64).reshape(-1)
+            if len(ids) != len(s):
+                raise ContractError("worker_ids/scores length mismatch")
+            if len(ids) and (ids.min() < 0 or ids.max() >= self.num_workers):
+                bad = ids[(ids < 0) | (ids >= self.num_workers)]
+                raise ContractError(
+                    f"scores from non-participants: {set(bad.tolist())}")
+            if len(np.unique(ids)) != len(ids):
+                raise ContractError("duplicate worker ids in settlement")
+
+        bad = s < self.T                                  # BadWorkers
+        stake_sel = self.stake[ids]
+        pen = np.where(bad, np.minimum(self.F * self.P / 100.0, stake_sel),
+                       0.0)                               # Pen(w), stake-capped
+        stake_after = stake_sel - pen
+        self.stake[ids] = stake_after
+        self.penalized_rounds[ids] += bad
+        self.requester_balance += float(pen.sum())        # step 7
+        self.score_sum[ids] += s
+        self.score_count[ids] += 1
+        self._score_log.append((ids, s))
+
+        records = encode_settlement_records(round_index, ids, s, pen,
+                                            stake_after)
+        txs = self.pending
+        self.pending = []
+        txs.append({"type": "settlement_batch", "round": round_index,
+                    "workers": int(len(ids)), "bad_count": int(bad.sum()),
+                    "total_penalty": float(pen.sum())})
+        if model_cid:
+            txs.append({"type": "model", "round": round_index,
+                        "cid": model_cid})
+        blk = self.ledger.append_block(txs, record_batch=records or None)
+        self._round_blocks[round_index] = blk.index
+        self._round_ids[round_index] = ids
+        return pen
 
     def settle_round(self, round_index: int, scores: Dict[str, float],
                      model_cid: str = "") -> Dict[str, float]:
-        """Record scores, penalize bad workers, seal the round's block.
-        Returns the penalties imposed this round."""
-        if self.closed:
-            raise ContractError("task closed")
-        unknown = set(scores) - set(self.workers)
+        """Legacy scalar API: score dict in, penalties dict out (bad workers
+        only, matching the original loop). Thin wrapper over the batch path;
+        dict order is normalized exactly like the original ``sorted`` loop."""
+        unknown = set(scores) - set(self._index)
         if unknown:
             raise ContractError(f"scores from non-participants: {unknown}")
-        penalties: Dict[str, float] = {}
-        for wid, s in sorted(scores.items()):
-            acct = self.workers[wid]
-            acct.scores.append(float(s))
-            self.pending.append({"type": "score", "round": round_index,
-                                 "worker": wid, "score": float(s)})
-            if s < self.T:                                   # BadWorkers
-                pen = min(self.F * self.P / 100.0, acct.stake)
-                acct.stake -= pen
-                acct.penalized_rounds += 1
-                self.requester_balance += pen                # step 7
-                penalties[wid] = pen
-                self.pending.append({"type": "penalty", "round": round_index,
-                                     "worker": wid, "amount": pen})
-        if model_cid:
-            self.pending.append({"type": "model", "round": round_index,
-                                 "cid": model_cid})
-        self.ledger.append_block(self.pending)
-        self.pending = []
-        return penalties
+        names = sorted(scores)
+        ids = np.asarray([self._index[n] for n in names], np.int64)
+        s = np.asarray([float(scores[n]) for n in names], np.float64)
+        pen = self.settle_round_batch(round_index, s, worker_ids=ids,
+                                      model_cid=model_cid)
+        bad = s < self.T
+        return {n: float(p) for n, p, b in zip(names, pen, bad) if b}
 
-    # -- task finalization (Alg. 1 steps 6 & 8) ------------------------------
+    # -- task finalization (Alg. 1 steps 6 & 8), vectorized -------------------
 
     def finalize(self) -> Dict[str, float]:
-        """Refund remaining stakes; pay top-k by mean score. Returns payouts."""
+        """Refund remaining stakes; pay top-k by mean score (``argpartition``
+        selection, stable tie-break by join order). Returns payouts."""
         if self.closed:
             raise ContractError("already finalized")
         self.closed = True
-        txs: List[dict] = []
-        payouts: Dict[str, float] = {}
-        for wid, acct in sorted(self.workers.items()):
-            refund = acct.stake                              # Refund(w) = D(w)
-            acct.stake = 0.0
-            acct.balance += refund
-            payouts[wid] = refund
-            txs.append({"type": "refund", "worker": wid, "amount": refund})
-        ranked = sorted(self.workers,
-                        key=lambda w: (sum(self.workers[w].scores) /
-                                       max(len(self.workers[w].scores), 1)),
-                        reverse=True)
-        top = ranked[: self.k]
-        if top:
-            share = self.reward_pool / len(top)              # R_total / k
-            for wid in top:
-                self.workers[wid].balance += share
-                payouts[wid] = payouts.get(wid, 0.0) + share
-                txs.append({"type": "reward", "worker": wid, "amount": share})
+        W = self.num_workers
+        refund = self.stake.copy()                       # Refund(w) = D(w)
+        self.balance += refund
+        self.stake[:] = 0.0
+        reward = np.zeros(W, np.float64)
+        k = min(self.k, W)
+        if W and k > 0:                                  # k<=0: refunds only
+            mean = self.score_sum / np.maximum(self.score_count, 1)
+            if k < W:
+                # argpartition finds the k-th mean; membership is then made
+                # tie-stable by hand (strictly-better workers + boundary
+                # ties in join order) — matching the legacy stable sort
+                kth = mean[np.argpartition(-mean, k - 1)[k - 1]]
+                above = np.nonzero(mean > kth)[0]
+                ties = np.nonzero(mean == kth)[0]
+                top = np.concatenate([above, ties[: k - len(above)]])
+            else:
+                top = np.arange(W)
+            share = self.reward_pool / k                 # R_total / k
+            reward[top] = share
+            self.balance += reward
             self.reward_pool = 0.0
-        self.ledger.append_block(txs)
-        return payouts
+        ids = np.arange(W)
+        records = encode_settlement_records(-1, ids, np.zeros(W), -refund,
+                                            np.zeros(W)) if W else []
+        txs = self.pending
+        self.pending = []
+        txs.append({"type": "finalize_batch", "workers": W,
+                    "refund_total": float(refund.sum()),
+                    "reward_total": float(reward.sum()),
+                    "top_k": int(min(self.k, W)) if W else 0})
+        self.ledger.append_block(txs, record_batch=records or None)
+        payout = refund + reward
+        return {self._names[i]: float(payout[i]) for i in range(W)}
+
+    # -- per-worker audit -----------------------------------------------------
+
+    def settlement_proof(self, round_index: int, worker) -> Dict:
+        """O(log W) auditable proof that worker ``worker`` (id or name) was
+        settled as recorded in ``round_index``'s block."""
+        wid = worker if isinstance(worker, (int, np.integer)) \
+            else self._index[worker]
+        block_index = self._round_blocks[round_index]
+        ids = self._round_ids[round_index]
+        pos = int(np.nonzero(ids == wid)[0][0])
+        leaf = self.ledger.record_batch(block_index)[pos]
+        return {"block_index": block_index, "leaf_index": pos, "leaf": leaf,
+                "proof": self.ledger.merkle_proof(block_index, pos),
+                "root": self.ledger.blocks[block_index].records_root,
+                "record": decode_settlement_record(leaf)}
+
+    def verify_settlement(self, proof: Dict) -> bool:
+        return MerkleTree.verify(proof["leaf"], proof["proof"],
+                                 proof["root"]) and \
+            proof["root"] == self.ledger.blocks[
+                proof["block_index"]].records_root
+
+    def _worker_scores(self, index: int) -> List[float]:
+        out = []
+        for ids, s in self._score_log:
+            pos = np.nonzero(ids == index)[0]
+            if len(pos):
+                out.append(float(s[pos[0]]))
+        return out
 
     # -- conservation invariant (property tests) -----------------------------
 
     def total_value(self) -> float:
         """Money is conserved: pool + requester + stakes + balances."""
         return (self.reward_pool + self.requester_balance +
-                sum(a.stake + a.balance for a in self.workers.values()))
+                float(self.stake.sum()) + float(self.balance.sum()))

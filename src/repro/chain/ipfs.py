@@ -1,9 +1,12 @@
 """Content-addressed artifact store — the IPFS stand-in.
 
-Model weights are serialized (msgpack of flattened numpy leaves, zstd
+Model weights are serialized (msgpack of flattened numpy leaves,
 compressed) and stored under their SHA-256 content hash; cluster heads
 "publish" aggregates here and other clusters "fetch by hash", exactly the
 paper's workflow. Retrieval verifies the hash (tamper evidence).
+
+Compression prefers zstd; containers without ``zstandard`` fall back to
+stdlib zlib (same API, blobs stay self-consistent within a process/run).
 """
 from __future__ import annotations
 
@@ -13,7 +16,23 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as _zstd
+
+    def _compress(data: bytes) -> bytes:
+        return _zstd.ZstdCompressor(level=3).compress(data)
+
+    def _decompress(blob: bytes) -> bytes:
+        return _zstd.ZstdDecompressor().decompress(blob)
+except ModuleNotFoundError:
+    import zlib
+
+    def _compress(data: bytes) -> bytes:
+        return zlib.compress(data, 6)
+
+    def _decompress(blob: bytes) -> bytes:
+        return zlib.decompress(blob)
 
 
 def _pack_tree(tree: Any) -> bytes:
@@ -28,11 +47,11 @@ def _pack_tree(tree: Any) -> bytes:
             for x in leaves
         ],
     }
-    return zstd.ZstdCompressor(level=3).compress(msgpack.packb(payload))
+    return _compress(msgpack.packb(payload))
 
 
 def _unpack_leaves(blob: bytes):
-    payload = msgpack.unpackb(zstd.ZstdDecompressor().decompress(blob))
+    payload = msgpack.unpackb(_decompress(blob))
     out = []
     for leaf in payload["leaves"]:
         dt = leaf["dtype"]

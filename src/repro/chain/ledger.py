@@ -5,14 +5,28 @@ transaction payloads, and ``verify_chain`` actually detects tampering. What
 is simulated away (consensus latency, gossip) is accounted for by
 ``work_units`` so the with/without-blockchain wall-time comparison (paper
 Fig. 2) has a mechanism-faithful cost model.
+
+Batched settlement (the array-native chain path): instead of embedding one
+score/penalty transaction dict per worker — O(W) Python dicts hashed into
+every round block — a block *commits* to the round's per-worker settlement
+records through a Merkle root over their canonical encodings
+(``Block.records_root``, part of the block hash). The records themselves
+live in the ledger's off-chain availability layer (``record_batch`` per
+block); any single worker's settlement stays auditable via an O(log W)
+``merkle_proof`` / ``verify_proof`` without rehashing the whole round.
+``verify_chain(deep=True)`` additionally recomputes every stored batch's
+root, so tampering with an individual record is detected exactly like
+tampering with an embedded transaction used to be. ``work_units`` counts
+the batched cost model: 1 + |txs| per block plus the 2n−1 Merkle hashes of
+an n-record commit.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import time
-from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 
 def canonical(obj: Any) -> bytes:
@@ -24,18 +38,84 @@ def sha256(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
 
 
+# -- Merkle commitment over per-worker settlement records ---------------------
+
+_LEAF_PREFIX = b"\x00"   # domain separation: leaf vs interior node hashing
+_NODE_PREFIX = b"\x01"   # (prevents second-preimage/extension confusions)
+
+
+class MerkleTree:
+    """Binary Merkle tree over raw leaf byte-strings.
+
+    Odd nodes are promoted unpaired (Bitcoin-style duplication would allow
+    mutation by appending a copy of the last leaf; promotion does not).
+    Proofs are lists of ``(side, sibling_digest_hex)`` with side ``"L"`` if
+    the sibling sits left of the running hash.
+    """
+
+    def __init__(self, leaves: Sequence[bytes]) -> None:
+        if not leaves:
+            raise ValueError("MerkleTree needs at least one leaf")
+        level = [hashlib.sha256(_LEAF_PREFIX + l).digest() for l in leaves]
+        self.levels: List[List[bytes]] = [level]
+        while len(level) > 1:
+            nxt = []
+            for i in range(0, len(level) - 1, 2):
+                nxt.append(hashlib.sha256(
+                    _NODE_PREFIX + level[i] + level[i + 1]).digest())
+            if len(level) % 2:
+                nxt.append(level[-1])            # promote unpaired node
+            self.levels.append(nxt)
+            level = nxt
+        # cost model: one hash per leaf + one per interior node (≈ 2n−1)
+        self.hash_ops = sum(len(lv) for lv in self.levels[:-1]) + 1 \
+            if len(self.levels) > 1 else 1
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.levels[0])
+
+    @property
+    def root(self) -> str:
+        return self.levels[-1][0].hex()
+
+    def proof(self, index: int) -> List[Tuple[str, str]]:
+        if not 0 <= index < self.num_leaves:
+            raise IndexError(f"leaf index {index} out of range")
+        path: List[Tuple[str, str]] = []
+        for level in self.levels[:-1]:
+            sib = index ^ 1
+            if sib < len(level):
+                path.append(("L" if sib < index else "R", level[sib].hex()))
+            index //= 2
+        return path
+
+    @staticmethod
+    def verify(leaf: bytes, proof: Sequence[Tuple[str, str]],
+               root: str) -> bool:
+        h = hashlib.sha256(_LEAF_PREFIX + leaf).digest()
+        for side, sib_hex in proof:
+            sib = bytes.fromhex(sib_hex)
+            pair = sib + h if side == "L" else h + sib
+            h = hashlib.sha256(_NODE_PREFIX + pair).digest()
+        return h.hex() == root
+
+
 @dataclass
 class Block:
     index: int
     prev_hash: str
     transactions: List[dict]
     timestamp: float
+    records_root: str = ""    # Merkle root of the batch commit ("" if none)
     hash: str = ""
 
     def compute_hash(self) -> str:
-        body = canonical({"index": self.index, "prev": self.prev_hash,
-                          "txs": self.transactions, "ts": self.timestamp})
-        return sha256(body)
+        body = {"index": self.index, "prev": self.prev_hash,
+                "txs": self.transactions, "ts": self.timestamp}
+        if self.records_root:       # keep genesis/legacy block hashes stable
+            body["records_root"] = self.records_root
+        return sha256(canonical(body))
 
 
 class Ledger:
@@ -48,28 +128,85 @@ class Ledger:
         genesis.hash = genesis.compute_hash()
         self.blocks: List[Block] = [genesis]
         self.work_units: int = 0          # hashing/verification operations done
+        # off-chain data availability: per-block batch records + their tree
+        self._record_batches: Dict[int, List[bytes]] = {}
+        self._record_trees: Dict[int, MerkleTree] = {}
 
     @property
     def head(self) -> Block:
         return self.blocks[-1]
 
     def append_block(self, transactions: List[dict],
-                     timestamp: Optional[float] = None) -> Block:
+                     timestamp: Optional[float] = None,
+                     record_batch: Optional[Sequence[bytes]] = None) -> Block:
+        """Seal a block. ``record_batch`` (canonically-encoded per-worker
+        settlement records) is Merkle-committed into the block hash via
+        ``records_root``; the records themselves stay off-chain but
+        per-record auditable (``merkle_proof``)."""
+        root = ""
+        tree = None
+        if record_batch:
+            tree = MerkleTree(record_batch)
+            root = tree.root
         blk = Block(len(self.blocks), self.head.hash, list(transactions),
-                    time.monotonic() if timestamp is None else timestamp)
+                    time.monotonic() if timestamp is None else timestamp,
+                    records_root=root)
         blk.hash = blk.compute_hash()
-        # verification pass every append (each node re-hashes the new block)
+        # verification pass every append (each node re-hashes the new block);
+        # batched commits add their 2n−1 Merkle hashes
         self.work_units += 1 + len(transactions)
+        if tree is not None:
+            self.work_units += tree.hash_ops
+            self._record_batches[blk.index] = list(record_batch)
+            self._record_trees[blk.index] = tree
         self.blocks.append(blk)
         return blk
 
-    def verify_chain(self) -> bool:
+    def verify_chain(self, deep: bool = False) -> bool:
+        """Hash-chain integrity; ``deep=True`` additionally recomputes every
+        stored record batch's Merkle root against its block commitment."""
         prev = self.GENESIS_HASH
         for blk in self.blocks:
             if blk.prev_hash != prev or blk.hash != blk.compute_hash():
                 return False
+            if deep and blk.index in self._record_batches:
+                if (MerkleTree(self._record_batches[blk.index]).root
+                        != blk.records_root):
+                    return False
             prev = blk.hash
         return True
+
+    # -- per-record audit -----------------------------------------------------
+
+    def record_batch(self, block_index: int) -> List[bytes]:
+        return self._record_batches[block_index]
+
+    def merkle_proof(self, block_index: int,
+                     leaf_index: int) -> List[Tuple[str, str]]:
+        """O(log n) inclusion proof for one settlement record of a batched
+        block — auditing worker w never rehashes the whole round."""
+        return self._record_trees[block_index].proof(leaf_index)
+
+    def verify_record(self, block_index: int, leaf_index: int,
+                      leaf: Optional[bytes] = None,
+                      proof: Optional[Sequence[Tuple[str, str]]] = None
+                      ) -> bool:
+        """Check one record against the on-chain root (leaf/proof default to
+        the ledger's own stored copies; pass externally-held values to audit
+        a third party's claim)."""
+        blk = self.blocks[block_index]
+        if not blk.records_root:
+            return False
+        if leaf is None:
+            leaf = self._record_batches[block_index][leaf_index]
+        if proof is None:
+            proof = self.merkle_proof(block_index, leaf_index)
+        return MerkleTree.verify(leaf, proof, blk.records_root)
+
+    def tamper_record(self, block_index: int, leaf_index: int,
+                      leaf: bytes) -> None:
+        """Test hook: corrupt an off-chain settlement record in place."""
+        self._record_batches[block_index][leaf_index] = leaf
 
     def randomness(self, round_index: int) -> int:
         """Deterministic on-chain randomness (leader rotation seed) derived

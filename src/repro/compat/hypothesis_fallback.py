@@ -1,0 +1,152 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface the
+test suite uses, installed by ``tests/conftest.py`` only when the real
+package is absent (the CI image pins the real one; the hermetic dev
+container may not ship it).
+
+Covered surface: ``@given(**strategies)``, ``@settings(max_examples=...,
+deadline=...)``, ``assume``, and the strategies ``integers``, ``floats``,
+``booleans``, ``sampled_from``, ``data``. Examples are drawn from a
+deterministic per-test PRNG (seeded from the test's qualified name), so
+failures are reproducible run-to-run; there is no shrinking — the
+falsifying example is reported verbatim.
+"""
+from __future__ import annotations
+
+import hashlib
+import inspect
+import sys
+import types
+from typing import Any, Callable, Dict
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any],
+                 label: str = "strategy") -> None:
+        self._draw = draw
+        self._label = label
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return self._label
+
+
+class _DataStrategy(_Strategy):
+    """Marker for ``st.data()`` — materializes to a ``_DataObject``."""
+
+    def __init__(self) -> None:
+        super().__init__(lambda rng: None, "data()")
+
+
+class _DataObject:
+    def __init__(self, rng: np.random.Generator) -> None:
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str = "") -> Any:
+        return strategy._draw(self._rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)),
+                     f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, **_: Any) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                     f"floats({min_value}, {max_value})")
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+def sampled_from(elements) -> _Strategy:
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                     f"sampled_from({seq!r})")
+
+
+def data() -> _DataStrategy:
+    return _DataStrategy()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             **_: Any) -> Callable:
+    """Decorator factory; only ``max_examples`` is honored (``deadline`` et
+    al. are accepted and ignored)."""
+
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies: _Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        seed = int.from_bytes(
+            hashlib.sha256(fn.__qualname__.encode()).digest()[:8], "big")
+
+        def wrapper() -> None:
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(seed)
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 10 * n:
+                attempts += 1
+                kwargs: Dict[str, Any] = {
+                    name: (_DataObject(rng) if isinstance(s, _DataStrategy)
+                           else s._draw(rng))
+                    for name, s in strategies.items()}
+                try:
+                    fn(**kwargs)
+                except _Unsatisfied:
+                    continue
+                except BaseException as exc:
+                    shown = {k: v for k, v in kwargs.items()
+                             if not isinstance(v, _DataObject)}
+                    raise AssertionError(
+                        f"falsifying example (hypothesis fallback): "
+                        f"{fn.__qualname__}({shown!r})") from exc
+                ran += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # empty signature so pytest does not mistake drawn args for fixtures
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register ``hypothesis`` / ``hypothesis.strategies`` modules backed by
+    this fallback. No-op if the real package is importable."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "data"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

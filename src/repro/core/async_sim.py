@@ -11,8 +11,8 @@ produces.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 import numpy as np
 
@@ -22,13 +22,6 @@ class WorkerProfile:
     speed: float              # mean seconds per local training round
     jitter: float = 0.2       # lognormal sigma on the duration
     failure_prob: float = 0.0  # chance a round's update is lost entirely
-
-
-@dataclass
-class ArrivalEvent:
-    time: float
-    worker: int
-    round_started: int
 
 
 class AsyncScheduler:
@@ -60,7 +53,11 @@ class AsyncScheduler:
         mask = np.zeros(W, np.int64)
         deadline = self.now + self.max_wait
         arrived = 0
-        while arrived < self.buffer_size and self._heap:
+        # at most W distinct arrivals exist per tick: a buffer_size > W with
+        # infinite max_wait would otherwise spin forever (heap never drains —
+        # every pop reschedules the worker)
+        need = min(self.buffer_size, W)
+        while arrived < need and self._heap:
             t, w, rnd = self._heap[0]
             if t > deadline:
                 break
@@ -72,7 +69,10 @@ class AsyncScheduler:
                 arrived += 1
             # the worker starts its next local round immediately
             self._schedule(w, rnd + 1)
-        self.now = max(self.now, min(deadline, self.now))
+        if arrived < need and np.isfinite(deadline):
+            # max_wait elapsed before the buffer filled: the aggregator
+            # waited the full window, so the clock advances to the deadline
+            self.now = max(self.now, deadline)
         snap = self.staleness.copy()
         self.staleness = np.where(mask > 0, 0, self.staleness + 1)
         self.agg_round += 1

@@ -4,14 +4,33 @@
 IPFS publication of cluster/global aggregates, deterministic head rotation
 from on-chain randomness, and optional asynchronous arrivals.
 
+Pipelined round driver: ``run_round`` dispatches round r's jitted
+``_round_fn`` *before* doing round r−1's host-side chain work, so contract
+settlement / Merkle commitment / IPFS publication overlap device execution
+instead of serializing behind a ``block_until_ready`` barrier. Scores are
+fetched with an async device→host copy; the only sync point is reading the
+materialized scores of the round just dispatched. Settlement therefore
+trails training by exactly one round; ``flush()`` (called by ``finalize``
+and safe to call any time) settles the trailing round. Decision sequences
+are unchanged versus the serial driver: head rotation for round r still
+sees the chain head of round r−1's block, and reputation-weighted election
+still sees scores through round r−1.
+
+Chain work is array-native end to end: workers are integer ids on the
+struct-of-arrays contract (``settle_round_batch``), blocks commit per-worker
+records via a Merkle root rather than W transaction dicts, and the round's
+global model is serialized to IPFS once, with the C cluster heads
+registering the same cid (identical fully-synchronized tree — one put, C
+registrations).
+
 Runs the paper's small-scale experiments end-to-end on CPU (Figs. 2-6);
 the same jitted round is what the production launcher shards over pods.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +40,7 @@ from repro.chain.contract import TrustContract
 from repro.chain.ipfs import IPFSStore
 from repro.chain.ledger import Ledger
 from repro.configs.base import FederationConfig, ModelConfig, TrainConfig
-from repro.core import async_agg, async_sim, fl_step
+from repro.core import async_agg, fl_step
 from repro.core.gossip import ClusterExchange
 from repro.core.reputation import ReputationBook
 from repro.models import api
@@ -33,12 +52,22 @@ class RoundRecord:
     scores: np.ndarray
     weights: np.ndarray
     losses: np.ndarray
-    penalties: Dict[str, float]
+    penalties: np.ndarray          # (W,) settlement penalties; zeros until
+                                   # the round is settled (pipelined driver)
     heads: List[int]
-    model_cid: str
+    model_cid: str                 # "" until settled
     wall_time: float
-    chain_time: float
+    chain_time: float              # host chain work done during this call
+                                   # (the *previous* round's settlement)
     participation: Optional[np.ndarray] = None
+    settled: bool = False
+
+
+@dataclass
+class _PendingRound:
+    record: RoundRecord
+    params: Any                    # round's resulting global params (device)
+    scores: np.ndarray
 
 
 class SDFLBProtocol:
@@ -61,6 +90,12 @@ class SDFLBProtocol:
         self.global_params, _ = api.init(cfg, key, tp=1)
         self.opt_state = fl_step.init_worker_opt(self.global_params, fed, tc)
         self._round_fn = jax.jit(fl_step.make_fl_round(cfg, fed, tc))
+        # eval fns jitted once here (re-wrapping jax.jit per call would
+        # recompile on every invocation)
+        loss_fn = api.loss_fn(cfg)
+        self._eval_fn = jax.jit(loss_fn)
+        self._eval_per_worker_fn = jax.jit(
+            jax.vmap(lambda p, b: loss_fn(p, b)[1], in_axes=(None, 0)))
 
         self.async_state = None
         self.scheduler = None
@@ -78,8 +113,7 @@ class SDFLBProtocol:
                 self.ledger, requester_deposit=fed.requester_deposit,
                 worker_stake=fed.worker_stake, penalty_pct=fed.penalty_pct,
                 trust_threshold=fed.trust_threshold, top_k=fed.top_k_rewarded)
-            for w in range(self.W):
-                self.contract.join(f"worker-{w}")
+            self.contract.join_batch(self.W)   # integer ids, one batch tx
         self.history: List[RoundRecord] = []
         self.heads = [0] * fed.num_clusters
         # reputation (EMA of scores + penalty history) drives head election
@@ -90,6 +124,7 @@ class SDFLBProtocol:
         self.exchange = (ClusterExchange(self.ipfs, self.ledger,
                                          fed.num_clusters)
                          if use_blockchain else None)
+        self._pending: Optional[_PendingRound] = None
 
     # -- head rotation from on-chain randomness ------------------------------
 
@@ -110,6 +145,36 @@ class SDFLBProtocol:
                           for _ in range(self.fed.num_clusters)]
         return self.heads
 
+    # -- deferred chain work (round r settles during round r+1's device exec) -
+
+    def _settle_pending(self) -> None:
+        p, self._pending = self._pending, None
+        if p is None:
+            return
+        ridx = p.record.round_index
+        if self.use_blockchain:
+            # one IPFS put of the (identical) global tree; every cluster
+            # head registers the cid for the cross-cluster hash exchange
+            # (paper §III.A)
+            cid = self.ipfs.put_tree(p.params)
+            for c in range(self.fed.num_clusters):
+                self.exchange.register(ridx, c, cid)
+            self.contract.pending.extend(self.exchange.round_transactions(ridx))
+            pen = self.contract.settle_round_batch(ridx, p.scores,
+                                                   model_cid=cid)
+            p.record.model_cid = cid
+            p.record.penalties = pen
+            assert self.ledger.verify_chain()
+            bad = p.scores < self.contract.T
+        else:
+            bad = np.zeros(self.W, bool)
+        self.reputation.update(p.scores, penalized=bad)
+        p.record.settled = True
+
+    def flush(self) -> None:
+        """Settle the trailing round (no-op when nothing is pending)."""
+        self._settle_pending()
+
     # -- one full protocol round ----------------------------------------------
 
     def run_round(self, batch: Dict[str, np.ndarray],
@@ -118,7 +183,6 @@ class SDFLBProtocol:
         setup); reshaped to (W, 1, B, ...) for the step function."""
         t0 = time.monotonic()
         ridx = len(self.history)
-        heads = self._rotate_heads(ridx)
 
         batch = {k: jnp.asarray(v)[:, None] for k, v in batch.items()}
         if self.adversary is not None:
@@ -127,6 +191,7 @@ class SDFLBProtocol:
         part = (None if participation is None
                 else jnp.asarray(participation, jnp.int32))
 
+        # 1. dispatch this round's jitted step — async, no barrier
         if self.fed.async_mode:
             out, self.async_state = self._round_fn(
                 self.global_params, self.opt_state, batch, rkey,
@@ -134,60 +199,54 @@ class SDFLBProtocol:
         else:
             out = self._round_fn(self.global_params, self.opt_state, batch,
                                  rkey, part)
-        out = jax.block_until_ready(out)
         self.global_params, self.opt_state = out.global_params, out.opt_state
-        scores = np.asarray(out.scores)
-        train_time = time.monotonic() - t0
+        try:                       # start device→host copy of the scores
+            out.scores.copy_to_host_async()
+        except AttributeError:     # backend without async host copies
+            pass
 
-        # ---- blockchain work (scored + penalized on-chain, model on IPFS) ----
+        # 2. previous round's host chain work overlaps this round's compute
         tc0 = time.monotonic()
-        penalties: Dict[str, float] = {}
-        cid = ""
-        if self.use_blockchain:
-            cid = self.ipfs.put_tree(self.global_params)
-            # cluster heads publish the round's global model for the
-            # cross-cluster hash exchange (paper §III.A)
-            for c in range(self.fed.num_clusters):
-                self.exchange.publish(ridx, c, self.global_params)
-            self.contract.pending.extend(self.exchange.round_transactions(ridx))
-            penalties = self.contract.settle_round(
-                ridx, {f"worker-{w}": float(scores[w]) for w in range(self.W)},
-                model_cid=cid)
-            assert self.ledger.verify_chain()
-        self.reputation.update(
-            scores, penalized=[int(k.split("-")[1]) for k in penalties])
+        self._settle_pending()
         chain_time = time.monotonic() - tc0
+
+        # 3. rotate heads for this round — the chain head is now the
+        #    previous round's block, exactly as in the serial driver
+        heads = self._rotate_heads(ridx)
+
+        # 4. the only training-path sync point: this round's scores
+        scores = np.asarray(out.scores)
+        train_time = time.monotonic() - t0 - chain_time
 
         rec = RoundRecord(
             round_index=ridx, scores=scores, weights=np.asarray(out.weights),
-            losses=np.asarray(out.losses), penalties=penalties, heads=heads,
-            model_cid=cid, wall_time=train_time + chain_time,
+            losses=np.asarray(out.losses),
+            penalties=np.zeros(self.W, np.float64), heads=heads,
+            model_cid="", wall_time=train_time + chain_time,
             chain_time=chain_time,
             participation=None if participation is None
             else np.asarray(participation))
+        self._pending = _PendingRound(rec, self.global_params, scores)
         self.history.append(rec)
         return rec
 
     # -- evaluation ------------------------------------------------------------
 
     def evaluate(self, eval_batch: Dict[str, np.ndarray]) -> Dict[str, float]:
-        loss_fn = api.loss_fn(self.cfg)
         batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
-        loss, metrics = jax.jit(loss_fn)(self.global_params, batch)
+        loss, metrics = self._eval_fn(self.global_params, batch)
         return {k: float(v) for k, v in metrics.items()}
 
     def evaluate_per_worker(self, batch_w: Dict[str, np.ndarray]) -> np.ndarray:
         """Per-worker eval accuracy of the *global* model on each worker's
         local shard (the per-worker curves of Figs. 5/6)."""
-        loss_fn = api.loss_fn(self.cfg)
-
-        def one(b):
-            return loss_fn(self.global_params, b)[1]
-        metrics = jax.jit(jax.vmap(one))(
+        metrics = self._eval_per_worker_fn(
+            self.global_params,
             {k: jnp.asarray(v) for k, v in batch_w.items()})
         return {k: np.asarray(v) for k, v in metrics.items()}
 
     def finalize(self) -> Dict[str, float]:
+        self.flush()               # settle the trailing pipelined round
         if self.contract is not None:
             return self.contract.finalize()
         return {}

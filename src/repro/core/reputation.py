@@ -26,10 +26,16 @@ class ReputationBook:
 
     def update(self, round_scores: Sequence[float],
                penalized: Sequence[int] = ()) -> None:
+        """Vectorized: ``penalized`` is either a (W,) boolean mask or an
+        array/sequence of penalized worker indices — no Python loop."""
         s = np.asarray(round_scores, np.float64)
         self.scores = self.ema * self.scores + (1 - self.ema) * s
-        for w in penalized:
-            self.penalties[w] += 1
+        p = np.asarray(penalized)
+        if p.size:
+            if p.dtype == bool:
+                self.penalties += p
+            else:
+                np.add.at(self.penalties, p.astype(np.int64), 1)
         self.rounds += 1
 
     def leader_weights(self, members: Sequence[int],

@@ -1,8 +1,23 @@
+import pathlib
+import sys
+
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # single real CPU device; only launch/dryrun.py forces 512 fake devices.
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # hermetic containers may lack hypothesis; install the API-compatible
+    # deterministic fallback so property tests still run
+    from repro.compat.hypothesis_fallback import install
+    install()
 
 
 @pytest.fixture(scope="session")

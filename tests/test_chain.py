@@ -1,13 +1,18 @@
 """Blockchain substrate: ledger integrity, contract (Algorithm 1)
-correctness + conservation properties, IPFS content addressing."""
+correctness + conservation properties, IPFS content addressing, and the
+array-native batch settlement path (batch-vs-scalar equivalence, Merkle
+commitments, 100k-worker scaling)."""
+import time
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.chain.contract import ContractError, TrustContract
+from repro.chain.contract import (ContractError, TrustContract,
+                                  decode_settlement_record)
 from repro.chain.ipfs import IPFSStore
-from repro.chain.ledger import Ledger
+from repro.chain.ledger import Ledger, MerkleTree
 
 
 def test_ledger_chain_verifies_and_detects_tampering():
@@ -99,3 +104,243 @@ def test_contract_value_conservation(n_workers, deposit, stake, pct,
     assert abs(c.total_value() - total0) < 1e-6 * max(total0, 1)
     # after finalize all stakes are zero (everything refunded/penalized)
     assert all(a.stake == 0.0 for a in c.workers.values())
+
+
+# -- array-native batch settlement -------------------------------------------
+
+class ReferenceContract:
+    """Seed-faithful scalar Algorithm 1 (per-worker dict loops) — the oracle
+    the vectorized batch path must match exactly."""
+
+    def __init__(self, deposit, stake, pct, threshold, k):
+        self.F, self.P, self.T, self.k = stake, pct, threshold, k
+        self.reward_pool = deposit
+        self.requester_balance = 0.0
+        self.accts = {}       # name -> [stake, balance, penalized, scores]
+
+    def join(self, name):
+        self.accts[name] = [self.F, 0.0, 0, []]
+
+    def settle_round(self, scores):
+        penalties = {}
+        for wid, s in sorted(scores.items()):
+            a = self.accts[wid]
+            a[3].append(float(s))
+            if s < self.T:
+                pen = min(self.F * self.P / 100.0, a[0])
+                a[0] -= pen
+                a[2] += 1
+                self.requester_balance += pen
+                penalties[wid] = pen
+        return penalties
+
+    def finalize(self):
+        payouts = {}
+        for wid, a in sorted(self.accts.items()):
+            payouts[wid] = a[0]
+            a[1] += a[0]
+            a[0] = 0.0
+        ranked = sorted(self.accts,
+                        key=lambda w: (sum(self.accts[w][3]) /
+                                       max(len(self.accts[w][3]), 1)),
+                        reverse=True)
+        top = ranked[: self.k]
+        if top:
+            share = self.reward_pool / len(top)
+            for wid in top:
+                self.accts[wid][1] += share
+                payouts[wid] += share
+            self.reward_pool = 0.0
+        return payouts
+
+    def total_value(self):
+        return (self.reward_pool + self.requester_balance +
+                sum(a[0] + a[1] for a in self.accts.values()))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_workers=st.integers(1, 24),
+    deposit=st.floats(1.0, 1e4),
+    stake=st.floats(0.1, 100.0),
+    pct=st.floats(0.0, 100.0),
+    threshold=st.floats(0.0, 1.0),
+    k=st.integers(1, 24),
+    rounds=st.integers(1, 5),
+    subset=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_batch_settlement_matches_scalar_reference(n_workers, deposit, stake,
+                                                   pct, threshold, k, rounds,
+                                                   subset, seed):
+    """Property: the vectorized settle_round_batch + finalize produce
+    penalties, payouts, stakes, penalized_rounds, and total_value identical
+    to the seed's per-worker scalar loops on random score matrices (full
+    rounds and random partial-participation rounds)."""
+    rng = np.random.default_rng(seed)
+    c = TrustContract(Ledger(), requester_deposit=deposit, worker_stake=stake,
+                      penalty_pct=pct, trust_threshold=threshold, top_k=k)
+    ref = ReferenceContract(deposit, stake, pct, threshold, k)
+    ids = c.join_batch(n_workers)
+    names = [c.worker_name(i) for i in ids]
+    for n in names:
+        ref.join(n)
+    total0 = c.total_value()
+    for r in range(rounds):
+        if subset and n_workers > 1:
+            m = int(rng.integers(1, n_workers + 1))
+            sel = np.sort(rng.choice(n_workers, size=m, replace=False))
+        else:
+            sel = np.arange(n_workers)
+        s = rng.random(len(sel))
+        pen_vec = c.settle_round_batch(r, s, worker_ids=sel)
+        ref_pen = ref.settle_round({names[w]: float(v)
+                                    for w, v in zip(sel, s)})
+        got_pen = {names[w]: float(p)
+                   for w, p, v in zip(sel, pen_vec, s) if v < threshold}
+        assert set(got_pen) == set(ref_pen)
+        for n_ in ref_pen:
+            assert got_pen[n_] == pytest.approx(ref_pen[n_], abs=1e-12)
+        assert c.requester_balance == pytest.approx(ref.requester_balance)
+        assert abs(c.total_value() - total0) < 1e-6 * max(total0, 1)
+    for i, n_ in enumerate(names):
+        assert c.workers[n_].stake == pytest.approx(ref.accts[n_][0])
+        assert c.workers[n_].penalized_rounds == ref.accts[n_][2]
+        assert c.workers[i].scores == ref.accts[n_][3]
+    pay = c.finalize()
+    ref_pay = ref.finalize()
+    assert set(pay) == set(ref_pay)
+    for n_ in pay:
+        assert pay[n_] == pytest.approx(ref_pay[n_], abs=1e-9)
+    assert c.total_value() == pytest.approx(ref.total_value())
+    assert abs(c.total_value() - total0) < 1e-6 * max(total0, 1)
+
+
+def test_merkle_tree_roots_and_proofs():
+    for n in (1, 2, 3, 5, 8, 13):
+        leaves = [f"leaf-{i}".encode() for i in range(n)]
+        t = MerkleTree(leaves)
+        for i, leaf in enumerate(leaves):
+            assert MerkleTree.verify(leaf, t.proof(i), t.root)
+            assert not MerkleTree.verify(b"forged", t.proof(i), t.root)
+        if n > 1:   # a proof for one index never validates another's leaf
+            assert not MerkleTree.verify(leaves[0], t.proof(1), t.root)
+    with pytest.raises(ValueError):
+        MerkleTree([])
+
+
+def test_batched_block_merkle_audit_and_tamper_detection():
+    led = Ledger()
+    c = TrustContract(led, requester_deposit=100.0, worker_stake=10.0,
+                      penalty_pct=50.0, trust_threshold=0.5, top_k=2)
+    c.join_batch(6)
+    scores = np.array([0.9, 0.4, 0.6, 0.2, 0.8, 0.55])
+    pen = c.settle_round_batch(0, scores, model_cid="cid0")
+    np.testing.assert_allclose(pen, [0, 5.0, 0, 5.0, 0, 0])
+    assert led.verify_chain(deep=True)
+    # every worker's settlement is individually auditable in O(log W)
+    for w in range(6):
+        proof = c.settlement_proof(0, w)
+        assert c.verify_settlement(proof)
+        assert len(proof["proof"]) <= 3           # ceil(log2(6))
+        rec = proof["record"]
+        assert rec["worker"] == w
+        assert rec["score"] == pytest.approx(scores[w])
+        assert rec["penalty"] == pytest.approx(pen[w])
+    # proofs also accept string worker names (legacy id scheme)
+    assert c.verify_settlement(c.settlement_proof(0, "worker-3"))
+    # round-trip decode of the canonical leaf encoding
+    blk = led.blocks[-1]
+    rec0 = decode_settlement_record(led.record_batch(blk.index)[1])
+    assert rec0 == {"round": 0, "worker": 1, "score": pytest.approx(0.4),
+                    "penalty": pytest.approx(5.0),
+                    "stake_after": pytest.approx(5.0)}
+    # tampering with an off-chain record breaks deep verification and the
+    # record's proof, while the block hash chain itself stays intact
+    led.tamper_record(blk.index, 1, b"x" * 40)
+    assert led.verify_chain() and not led.verify_chain(deep=True)
+    assert not led.verify_record(blk.index, 1)
+    # tampering with the committed root breaks the shallow chain too
+    blk.records_root = "0" * 64
+    assert not led.verify_chain()
+
+
+def test_settle_round_batch_validates_inputs():
+    c = TrustContract(Ledger(), requester_deposit=10, worker_stake=1,
+                      penalty_pct=10, trust_threshold=0.5, top_k=1)
+    c.join_batch(4)
+    with pytest.raises(ContractError):          # wrong length
+        c.settle_round_batch(0, np.zeros(3))
+    with pytest.raises(ContractError):          # unknown id
+        c.settle_round_batch(0, np.zeros(1), worker_ids=np.array([9]))
+    with pytest.raises(ContractError):          # duplicate ids
+        c.settle_round_batch(0, np.zeros(2), worker_ids=np.array([1, 1]))
+    c.finalize()
+    with pytest.raises(ContractError):          # closed task
+        c.settle_round_batch(1, np.zeros(4))
+
+
+def test_settlement_scales_to_100k_workers_under_1s():
+    """Acceptance: chain-only settlement at W=100,000 completes a full round
+    (vectorized Algorithm 1 + Merkle commit + block seal) in < 1s on CPU."""
+    W = 100_000
+    led = Ledger()
+    c = TrustContract(led, requester_deposit=1e6, worker_stake=10.0,
+                      penalty_pct=50.0, trust_threshold=0.5, top_k=100)
+    c.join_batch(W)
+    scores = np.random.default_rng(0).random(W)
+    t0 = time.monotonic()
+    pen = c.settle_round_batch(0, scores)
+    dt = time.monotonic() - t0
+    assert dt < 1.0, f"100k-worker settlement took {dt:.2f}s"
+    assert pen.shape == (W,)
+    bad = int((scores < 0.5).sum())
+    assert int((pen > 0).sum()) == bad
+    assert c.requester_balance == pytest.approx(bad * 5.0)
+    # spot-audit one worker without rehashing the round
+    proof = c.settlement_proof(0, 31_337)
+    assert c.verify_settlement(proof)
+    assert len(proof["proof"]) == 17            # ceil(log2(100k))
+
+
+def test_finalize_with_zero_top_k_pays_refunds_only():
+    c = TrustContract(Ledger(), requester_deposit=50.0, worker_stake=5.0,
+                      penalty_pct=10.0, trust_threshold=0.5, top_k=0)
+    c.join_batch(3)
+    c.settle_round_batch(0, np.array([0.9, 0.8, 0.7]))
+    pay = c.finalize()
+    assert pay == {"worker-0": 5.0, "worker-1": 5.0, "worker-2": 5.0}
+    assert c.reward_pool == 50.0               # undistributed, conserved
+    assert c.total_value() == pytest.approx(50.0 + 3 * 5.0)
+
+
+def test_finalize_topk_tie_break_is_join_order():
+    """Exact mean-score ties straddling the k boundary must resolve by join
+    order (the legacy stable sort), not argpartition's arbitrary pick."""
+    c = TrustContract(Ledger(), requester_deposit=90.0, worker_stake=1.0,
+                      penalty_pct=0.0, trust_threshold=0.0, top_k=3)
+    c.join_batch(6)
+    c.settle_round_batch(0, np.array([0.5, 0.9, 0.5, 0.5, 0.2, 0.5]))
+    pay = c.finalize()
+    # top-3: worker 1 (0.9) then the first two tied 0.5s by join order (0, 2)
+    rewarded = {n for n, p in pay.items() if p > 1.0}
+    assert rewarded == {"worker-1", "worker-0", "worker-2"}
+
+
+def test_settlement_proofs_with_out_of_order_rounds():
+    """Audit bookkeeping is keyed by round index, so rounds settled out of
+    order (async arrivals) still yield correct per-worker proofs."""
+    c = TrustContract(Ledger(), requester_deposit=10.0, worker_stake=2.0,
+                      penalty_pct=50.0, trust_threshold=0.5, top_k=1)
+    c.join_batch(4)
+    c.settle_round_batch(5, np.array([0.9, 0.1]),
+                         worker_ids=np.array([0, 1]))
+    c.settle_round_batch(2, np.array([0.3, 0.8]),
+                         worker_ids=np.array([2, 3]))
+    for rnd, wid, score in ((5, 0, 0.9), (5, 1, 0.1), (2, 2, 0.3),
+                            (2, 3, 0.8)):
+        proof = c.settlement_proof(rnd, wid)
+        assert c.verify_settlement(proof)
+        assert proof["record"]["round"] == rnd
+        assert proof["record"]["worker"] == wid
+        assert proof["record"]["score"] == pytest.approx(score)

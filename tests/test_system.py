@@ -33,10 +33,14 @@ def test_protocol_learns_and_chain_verifies():
     loss1 = proto.evaluate(ev)["loss"]
     assert loss1 < loss0                       # convergence (Fig. 5/6 trend)
     assert proto.ledger.verify_chain()
-    assert len(proto.ledger.blocks) == 26      # genesis + 25 rounds
-    # per round: global model + one cluster aggregate per cluster (§III.A)
-    assert proto.ipfs.puts == 25 * (1 + FED3.num_clusters)
-    payouts = proto.finalize()
+    # pipelined driver: settlement trails training by one round
+    assert len(proto.ledger.blocks) == 25      # genesis + 24 settled rounds
+    payouts = proto.finalize()                 # flushes round 25, then final
+    assert proto.ledger.verify_chain(deep=True)
+    assert len(proto.ledger.blocks) == 27      # + round 25 + finalize block
+    # one IPFS put per settled round: the identical global tree is stored
+    # once, its cid registered per cluster head (§III.A exchange, deduped)
+    assert proto.ipfs.puts == 25
     assert len(payouts) == 3
     assert abs(proto.contract.total_value()
                - (FED3.requester_deposit + 3 * FED3.worker_stake)) < 1e-6
@@ -76,6 +80,7 @@ def test_malicious_worker_penalized_on_chain():
     proto = SDFLBProtocol(cfg, fed, TC, use_blockchain=True, seed=0,
                           adversary=adversary)
     _run(proto, ds, 12)
+    proto.flush()          # settle the trailing pipelined round
     scores = np.stack([r.scores for r in proto.history[2:]])
     assert scores[:, 0].mean() < scores[:, 1:].mean()
     acct = proto.contract.workers["worker-0"]
@@ -115,6 +120,25 @@ def test_async_mode_tolerates_stragglers():
     assert proto.evaluate(ev)["loss"] < loss0
     parts = np.stack([r.participation for r in proto.history])
     assert parts.sum() < 20 * W                # stragglers missed rounds
+
+
+def test_async_scheduler_caps_buffer_at_worker_count():
+    """buffer_size > W must terminate (only W distinct arrivals exist per
+    tick) instead of spinning on the never-empty reschedule heap."""
+    profiles = async_sim.heterogeneous_profiles(4, seed=0)
+    sched = async_sim.AsyncScheduler(profiles, seed=0, buffer_size=8)
+    t, mask, _ = sched.next_aggregation()
+    assert mask.sum() == 4 and t > 0.0
+
+
+def test_async_scheduler_deadline_advances_clock():
+    """When max_wait elapses with no arrivals (all updates lost), the clock
+    advances to the deadline instead of freezing."""
+    profiles = [async_sim.WorkerProfile(speed=1.0, failure_prob=1.0)] * 3
+    sched = async_sim.AsyncScheduler(profiles, seed=0, buffer_size=2,
+                                     max_wait=5.0)
+    times = [sched.next_aggregation()[0] for _ in range(3)]
+    assert times == [5.0, 10.0, 15.0]
 
 
 def test_async_scheduler_faster_than_sync():
