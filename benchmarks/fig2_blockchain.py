@@ -14,34 +14,83 @@ from repro.data.datasets import make_federated_mnist
 
 
 def run(rounds: int = 60, samples: int = 2048, seed: int = 0):
-    results = {}
+    results, settle = {}, {}
     for chain in (True, False):
         ds = make_federated_mnist(3, samples=samples, seed=seed)
         proto = paper_protocol(3, blockchain=chain, seed=seed)
         log = run_rounds(proto, ds, rounds, eval_every=max(rounds // 10, 1))
-        proto.finalize()
-        results["with" if chain else "without"] = log
+        proto.finalize()            # drains the settler: settle_time final
+        key = "with" if chain else "without"
+        results[key] = log
+        settle[key] = float(np.mean([r.settle_time for r in proto.history]))
     on, off = results["with"], results["without"]
     acc_gap = max(abs(a["accuracy"] - b["accuracy"]) for a, b in zip(on, off))
     t_on = float(np.mean([r["round_time"] for r in on]))
     t_off = float(np.mean([r["round_time"] for r in off]))
-    chain_on = float(np.mean([r["chain_time"] for r in on]))
-    chain_off = float(np.mean([r["chain_time"] for r in off]))
+    # training-thread chain cost is the settler queue handoff only; the real
+    # per-round chain work (IPFS + contract + Merkle) is the settler-thread
+    # settle_time
+    handoff_on = float(np.mean([r["chain_time"] for r in on]))
+    chain_on, chain_off = settle["with"], settle["without"]
     csv_row("fig2_round_time_with_chain", t_on * 1e6,
-            f"acc={on[-1]['accuracy']:.3f} chain_us={chain_on * 1e6:.0f}")
+            f"acc={on[-1]['accuracy']:.3f} settle_us={chain_on * 1e6:.0f} "
+            f"handoff_us={handoff_on * 1e6:.1f}")
     csv_row("fig2_round_time_without_chain", t_off * 1e6,
             f"acc={off[-1]['accuracy']:.3f}")
     csv_row("fig2_accuracy_gap", 0.0, f"max_gap={acc_gap:.6f}")
     csv_row("fig2_chain_overhead_pct", chain_on * 1e6,
-            f"{chain_on / max(t_on - chain_on, 1e-9) * 100:.2f}% of round")
+            f"{chain_on / max(t_on, 1e-9) * 100:.2f}% of round, "
+            f"off the training thread")
     assert acc_gap < 1e-6, "learning dynamics must be chain-independent"
-    # the chain's extra work is measured directly (hashing + contract +
-    # IPFS); comparing total wall-time is noise-dominated on CPU at this
-    # model size, the paper's "with chain is slower" trend is the positive
-    # per-round chain_time
+    # the chain's extra work is measured directly on the settler thread
+    # (hashing + contract + IPFS); comparing total wall-time is
+    # noise-dominated on CPU at this model size, the paper's "with chain is
+    # slower" trend is the positive per-round settle_time
     assert chain_on > 10 * chain_off   # chain work is real, off-path ~0
     return {"with": on, "without": off, "acc_gap": acc_gap,
-            "overhead_pct": chain_on / max(t_on - chain_on, 1e-9) * 100}
+            "settle_s": settle,
+            "overhead_pct": chain_on / max(t_on, 1e-9) * 100}
+
+
+def run_pipeline_depths(depths=(0, 1, 2, 4), rounds: int = 20,
+                        samples: int = 1024, seed: int = 0):
+    """Pipeline-depth sweep: identical chains at every depth (the settler
+    preserves decision sequences), while the chain cost charged to the
+    training thread collapses from the full settlement (depth 0, inline)
+    to the queue handoff (depth > 0, background settler)."""
+    from repro.configs.base import FederationConfig
+    from repro.configs.registry import get_config
+    from repro.core.protocol import SDFLBProtocol
+
+    from benchmarks.common import PAPER_TC
+
+    out = {}
+    chains = {}
+    for depth in depths:
+        ds = make_federated_mnist(3, samples=samples, seed=seed)
+        fed = FederationConfig(num_clusters=1, workers_per_cluster=3,
+                               trust_threshold=0.2, pipeline_depth=depth)
+        proto = SDFLBProtocol(get_config("paper-net"), fed, PAPER_TC,
+                              use_blockchain=True, seed=seed)
+        for _ in range(rounds):
+            proto.run_round(ds.round_batches(32))
+        proto.finalize()
+        train_chain = float(np.mean([r.chain_time for r in proto.history]))
+        settle_t = float(np.mean([r.settle_time for r in proto.history]))
+        out[depth] = {"train_thread_chain_s": train_chain,
+                      "settler_thread_s": settle_t}
+        chains[depth] = [b.hash for b in proto.ledger.blocks]
+        csv_row(f"fig2_pipeline_depth{depth}", train_chain * 1e6,
+                f"settler_us={settle_t * 1e6:.0f} "
+                f"{'inline' if depth == 0 else 'threaded'}")
+    # decisions are depth-independent (byte-identical chains) ...
+    assert all(c == chains[depths[0]] for c in chains.values())
+    # ... and the threaded settler hides the chain work: the training
+    # thread pays the queue handoff, a fraction of the inline settlement
+    threaded = min(out[d]["train_thread_chain_s"] for d in depths if d > 0)
+    assert threaded < 0.5 * out[0]["train_thread_chain_s"], \
+        f"threaded handoff must beat inline settlement: {out}"
+    return out
 
 
 def run_settlement_paths(W: int = 5_000, rounds: int = 5, seed: int = 0):
@@ -87,4 +136,5 @@ def run_settlement_paths(W: int = 5_000, rounds: int = 5, seed: int = 0):
 if __name__ == "__main__":
     import json
     run_settlement_paths()
+    run_pipeline_depths()
     print(json.dumps(run()["with"][-1], indent=1))

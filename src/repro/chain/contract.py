@@ -18,9 +18,12 @@ ops and O(W) vectorized numpy — ``settle_round_batch`` computes BadWorkers,
 penalties, and the requester transfer without a per-worker loop, and
 ``finalize`` ranks top-k via ``argpartition``. Each settlement block
 commits to the round's canonically-encoded per-worker records through a
-Merkle root (see ``chain.ledger``), so balances stay fully auditable —
-per-worker via O(log W) proofs (``settlement_proof``) rather than per-worker
-embedded transactions.
+chunked Merkle root (see ``chain.ledger``): records are encoded as one
+contiguous fixed-width buffer (``RecordBatch``) and committed
+``merkle_chunk_size`` records per leaf, so the commit hashes ~2·W/k nodes
+instead of ~2·W while balances stay fully auditable — per-worker via
+O(log(W/k) + k) proofs (``settlement_proof``: the record's chunk plus the
+node path) rather than per-worker embedded transactions.
 
 The legacy scalar API (``join`` / ``settle_round`` with a score dict /
 dict-like ``workers`` access) is kept as a thin wrapper over the batch
@@ -33,7 +36,7 @@ from typing import Dict, Iterator, List, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.chain.ledger import Ledger, MerkleTree
+from repro.chain.ledger import Ledger, MerkleTree, RecordBatch
 
 
 class ContractError(RuntimeError):
@@ -47,10 +50,12 @@ _RECORD_DTYPE = np.dtype([("round", "<i8"), ("worker", "<i8"),
 
 def encode_settlement_records(round_index: int, worker_ids: np.ndarray,
                               scores: np.ndarray, penalties: np.ndarray,
-                              stakes_after: np.ndarray) -> List[bytes]:
+                              stakes_after: np.ndarray) -> RecordBatch:
     """Canonical fixed-width binary encoding of per-worker settlement
-    records — the Merkle leaves committed by a settlement block. Built
-    vectorized (one structured array, sliced into rows)."""
+    records — the Merkle-committed data of a settlement block. Built
+    vectorized into one contiguous buffer; the returned ``RecordBatch``
+    indexes like a list of per-record bytes but lets the chunked Merkle
+    commit slice whole leaves zero-copy."""
     n = len(worker_ids)
     rec = np.empty(n, dtype=_RECORD_DTYPE)
     rec["round"] = round_index
@@ -58,9 +63,7 @@ def encode_settlement_records(round_index: int, worker_ids: np.ndarray,
     rec["score"] = scores
     rec["penalty"] = penalties
     rec["stake_after"] = stakes_after
-    buf = rec.tobytes()
-    step = _RECORD_DTYPE.itemsize
-    return [buf[i * step:(i + 1) * step] for i in range(n)]
+    return RecordBatch(rec.tobytes(), _RECORD_DTYPE.itemsize)
 
 
 def decode_settlement_record(leaf: bytes) -> Dict[str, float]:
@@ -154,14 +157,18 @@ class TrustContract:
 
     def __init__(self, ledger: Ledger, *, requester_deposit: float,
                  worker_stake: float, penalty_pct: float,
-                 trust_threshold: float, top_k: int) -> None:
+                 trust_threshold: float, top_k: int,
+                 merkle_chunk_size: int = 64) -> None:
         if requester_deposit <= 0:
             raise ContractError("deployment requires a positive deposit")
+        if merkle_chunk_size < 1:
+            raise ContractError("merkle_chunk_size must be >= 1")
         self.ledger = ledger
         self.F = worker_stake
         self.P = penalty_pct
         self.T = trust_threshold
         self.k = top_k
+        self.merkle_chunk_size = merkle_chunk_size
         self.reward_pool = requester_deposit
         self.requester_balance = 0.0
         # struct-of-arrays account state (amortized-doubling capacity)
@@ -250,12 +257,15 @@ class TrustContract:
 
     def settle_round_batch(self, round_index: int, scores: np.ndarray,
                            worker_ids: Optional[np.ndarray] = None,
-                           model_cid: str = "") -> np.ndarray:
+                           model_cid: str = "",
+                           timestamp: Optional[float] = None) -> np.ndarray:
         """Vectorized settlement: BadWorkers mask, stake-capped penalties,
         requester transfer, and the Merkle-committed round block — no
         per-worker Python loop. ``worker_ids`` defaults to all workers (the
-        common full-participation round). Returns the (len(scores),) penalty
-        vector aligned with ``scores``."""
+        common full-participation round). ``timestamp`` lets the protocol
+        seal blocks at logical (round-indexed) time so every node — and the
+        threaded vs serial drivers — computes identical block hashes.
+        Returns the (len(scores),) penalty vector aligned with ``scores``."""
         if self.closed:
             raise ContractError("task closed")
         s = np.asarray(scores, np.float64).reshape(-1)
@@ -297,7 +307,10 @@ class TrustContract:
         if model_cid:
             txs.append({"type": "model", "round": round_index,
                         "cid": model_cid})
-        blk = self.ledger.append_block(txs, record_batch=records or None)
+        blk = self.ledger.append_block(
+            txs, timestamp=timestamp,
+            record_batch=records if len(records) else None,
+            chunk_size=self.merkle_chunk_size)
         self._round_blocks[round_index] = blk.index
         self._round_ids[round_index] = ids
         return pen
@@ -320,7 +333,7 @@ class TrustContract:
 
     # -- task finalization (Alg. 1 steps 6 & 8), vectorized -------------------
 
-    def finalize(self) -> Dict[str, float]:
+    def finalize(self, timestamp: Optional[float] = None) -> Dict[str, float]:
         """Refund remaining stakes; pay top-k by mean score (``argpartition``
         selection, stable tie-break by join order). Returns payouts."""
         if self.closed:
@@ -350,35 +363,58 @@ class TrustContract:
             self.reward_pool = 0.0
         ids = np.arange(W)
         records = encode_settlement_records(-1, ids, np.zeros(W), -refund,
-                                            np.zeros(W)) if W else []
+                                            np.zeros(W)) if W else None
         txs = self.pending
         self.pending = []
         txs.append({"type": "finalize_batch", "workers": W,
                     "refund_total": float(refund.sum()),
                     "reward_total": float(reward.sum()),
                     "top_k": int(min(self.k, W)) if W else 0})
-        self.ledger.append_block(txs, record_batch=records or None)
+        self.ledger.append_block(txs, timestamp=timestamp,
+                                 record_batch=records,
+                                 chunk_size=self.merkle_chunk_size)
         payout = refund + reward
         return {self._names[i]: float(payout[i]) for i in range(W)}
 
     # -- per-worker audit -----------------------------------------------------
 
     def settlement_proof(self, round_index: int, worker) -> Dict:
-        """O(log W) auditable proof that worker ``worker`` (id or name) was
-        settled as recorded in ``round_index``'s block."""
+        """O(log(W/k) + k) auditable proof that worker ``worker`` (id or
+        name) was settled as recorded in ``round_index``'s block: the
+        record's chunk (the k records sharing its Merkle leaf, ``offset``
+        locating the record within it) plus the node path to the root."""
         wid = worker if isinstance(worker, (int, np.integer)) \
             else self._index[worker]
         block_index = self._round_blocks[round_index]
         ids = self._round_ids[round_index]
         pos = int(np.nonzero(ids == wid)[0][0])
-        leaf = self.ledger.record_batch(block_index)[pos]
-        return {"block_index": block_index, "leaf_index": pos, "leaf": leaf,
+        chunk, offset = self.ledger.record_chunk(block_index, pos)
+        return {"block_index": block_index, "leaf_index": pos,
+                "leaf": chunk[offset], "chunk": chunk, "offset": offset,
                 "proof": self.ledger.merkle_proof(block_index, pos),
                 "root": self.ledger.blocks[block_index].records_root,
-                "record": decode_settlement_record(leaf)}
+                "record": decode_settlement_record(chunk[offset])}
 
     def verify_settlement(self, proof: Dict) -> bool:
-        return MerkleTree.verify(proof["leaf"], proof["proof"],
+        """Self-contained check of a ``settlement_proof`` dict: the claimed
+        record must sit at its offset in the chunk, the decoded ``record``
+        view must match the authenticated leaf bytes, the chunk must hash
+        to the root through the node path, and the root must match the
+        block's on-chain commitment. Malformed (attacker-supplied) proofs
+        are rejected, never raised on."""
+        chunk = proof.get("chunk", [proof["leaf"]])
+        offset = proof.get("offset", 0)
+        if not (isinstance(offset, int) and 0 <= offset < len(chunk)):
+            return False
+        if chunk[offset] != proof["leaf"]:
+            return False
+        if "record" in proof:       # the human-readable view is part of the
+            try:                    # claim — it must decode from the leaf
+                if decode_settlement_record(proof["leaf"]) != proof["record"]:
+                    return False
+            except (ValueError, IndexError):
+                return False
+        return MerkleTree.verify(b"".join(chunk), proof["proof"],
                                  proof["root"]) and \
             proof["root"] == self.ledger.blocks[
                 proof["block_index"]].records_root

@@ -12,13 +12,20 @@ every round block — a block *commits* to the round's per-worker settlement
 records through a Merkle root over their canonical encodings
 (``Block.records_root``, part of the block hash). The records themselves
 live in the ledger's off-chain availability layer (``record_batch`` per
-block); any single worker's settlement stays auditable via an O(log W)
-``merkle_proof`` / ``verify_proof`` without rehashing the whole round.
-``verify_chain(deep=True)`` additionally recomputes every stored batch's
-root, so tampering with an individual record is detected exactly like
-tampering with an embedded transaction used to be. ``work_units`` counts
-the batched cost model: 1 + |txs| per block plus the 2n−1 Merkle hashes of
-an n-record commit.
+block); any single worker's settlement stays auditable via an
+O(log(W/k) + k) ``merkle_proof`` / ``verify_record`` without rehashing the
+whole round. ``verify_chain(deep=True)`` additionally recomputes every
+stored batch's root, so tampering with an individual record is detected
+exactly like tampering with an embedded transaction used to be.
+
+Chunked leaves: a commit may pack ``chunk_size`` consecutive records into
+each Merkle leaf (leaf bytes = the records' concatenation), so a W-record
+commit hashes ~2·W/k nodes instead of ~2·W — the per-leaf SHA-256 was the
+last O(W) host cost on the settlement path. Auditing one record then needs
+its chunk (k records, fixed-width so the offset is unambiguous) plus the
+O(log(W/k)) node path; ``chunk_size=1`` reproduces the per-record tree
+bit-for-bit. ``work_units`` counts the batched cost model: 1 + |txs| per
+block plus the ~2·ceil(n/k)−1 Merkle hashes of an n-record commit.
 """
 from __future__ import annotations
 
@@ -26,7 +33,7 @@ import hashlib
 import json
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 
 def canonical(obj: Any) -> bytes:
@@ -44,19 +51,71 @@ _LEAF_PREFIX = b"\x00"   # domain separation: leaf vs interior node hashing
 _NODE_PREFIX = b"\x01"   # (prevents second-preimage/extension confusions)
 
 
-class MerkleTree:
-    """Binary Merkle tree over raw leaf byte-strings.
+class RecordBatch(Sequence):
+    """Fixed-width records backed by one contiguous buffer.
 
-    Odd nodes are promoted unpaired (Bitcoin-style duplication would allow
-    mutation by appending a copy of the last leaf; promotion does not).
-    Proofs are lists of ``(side, sibling_digest_hex)`` with side ``"L"`` if
-    the sibling sits left of the running hash.
+    The batch settlement path encodes a whole round as a single structured
+    numpy buffer; wrapping it (instead of slicing W small ``bytes`` objects
+    up front) keeps the commit zero-copy — chunk leaves are direct buffer
+    slices and per-record access materializes only the record asked for.
     """
 
-    def __init__(self, leaves: Sequence[bytes]) -> None:
-        if not leaves:
-            raise ValueError("MerkleTree needs at least one leaf")
-        level = [hashlib.sha256(_LEAF_PREFIX + l).digest() for l in leaves]
+    __slots__ = ("buf", "itemsize")
+
+    def __init__(self, buf: bytes, itemsize: int) -> None:
+        if itemsize <= 0 or len(buf) % itemsize:
+            raise ValueError("buffer is not a whole number of records")
+        self.buf = buf
+        self.itemsize = itemsize
+
+    def __len__(self) -> int:
+        return len(self.buf) // self.itemsize
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        if not -len(self) <= i < len(self):
+            raise IndexError(i)
+        i %= len(self)
+        return self.buf[i * self.itemsize:(i + 1) * self.itemsize]
+
+    def chunk_bytes(self, start: int, stop: int) -> bytes:
+        return self.buf[start * self.itemsize:stop * self.itemsize]
+
+
+Records = Union[RecordBatch, Sequence[bytes]]
+
+
+def _chunk_bytes(records: Records, start: int, stop: int) -> bytes:
+    if stop - start == 1:                     # per-record leaf (chunk_size=1)
+        return records[start]
+    if isinstance(records, RecordBatch):
+        return records.chunk_bytes(start, stop)
+    return b"".join(records[start:stop])
+
+
+class MerkleTree:
+    """Binary Merkle tree over records, ``chunk_size`` records per leaf.
+
+    A leaf's bytes are the concatenation of its chunk's records (with the
+    default ``chunk_size=1`` this is exactly a per-record tree — same roots
+    and proofs as always). Odd nodes are promoted unpaired (Bitcoin-style
+    duplication would allow mutation by appending a copy of the last leaf;
+    promotion does not). Proofs are lists of ``(side, sibling_digest_hex)``
+    with side ``"L"`` if the sibling sits left of the running hash.
+    """
+
+    def __init__(self, records: Records, chunk_size: int = 1) -> None:
+        if not len(records):
+            raise ValueError("MerkleTree needs at least one record")
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        n = len(records)
+        self.num_records = n
+        self.chunk_size = chunk_size
+        level = [hashlib.sha256(
+            _LEAF_PREFIX + _chunk_bytes(records, i, min(i + chunk_size, n))
+        ).digest() for i in range(0, n, chunk_size)]
         self.levels: List[List[bytes]] = [level]
         while len(level) > 1:
             nxt = []
@@ -67,7 +126,7 @@ class MerkleTree:
                 nxt.append(level[-1])            # promote unpaired node
             self.levels.append(nxt)
             level = nxt
-        # cost model: one hash per leaf + one per interior node (≈ 2n−1)
+        # cost model: one hash per leaf + one per interior node
         self.hash_ops = sum(len(lv) for lv in self.levels[:-1]) + 1 \
             if len(self.levels) > 1 else 1
 
@@ -80,6 +139,7 @@ class MerkleTree:
         return self.levels[-1][0].hex()
 
     def proof(self, index: int) -> List[Tuple[str, str]]:
+        """Node path for leaf (= chunk) ``index``."""
         if not 0 <= index < self.num_leaves:
             raise IndexError(f"leaf index {index} out of range")
         path: List[Tuple[str, str]] = []
@@ -90,9 +150,17 @@ class MerkleTree:
             index //= 2
         return path
 
+    def record_proof(self, record_index: int) -> List[Tuple[str, str]]:
+        """Node path for the chunk containing record ``record_index``."""
+        if not 0 <= record_index < self.num_records:
+            raise IndexError(f"record index {record_index} out of range")
+        return self.proof(record_index // self.chunk_size)
+
     @staticmethod
     def verify(leaf: bytes, proof: Sequence[Tuple[str, str]],
                root: str) -> bool:
+        """``leaf`` is the full leaf byte-string — for a chunked tree, the
+        concatenation of the chunk's records."""
         h = hashlib.sha256(_LEAF_PREFIX + leaf).digest()
         for side, sib_hex in proof:
             sib = bytes.fromhex(sib_hex)
@@ -129,8 +197,9 @@ class Ledger:
         self.blocks: List[Block] = [genesis]
         self.work_units: int = 0          # hashing/verification operations done
         # off-chain data availability: per-block batch records + their tree
-        self._record_batches: Dict[int, List[bytes]] = {}
+        self._record_batches: Dict[int, Records] = {}
         self._record_trees: Dict[int, MerkleTree] = {}
+        self._record_chunks: Dict[int, int] = {}
 
     @property
     def head(self) -> Block:
@@ -138,27 +207,32 @@ class Ledger:
 
     def append_block(self, transactions: List[dict],
                      timestamp: Optional[float] = None,
-                     record_batch: Optional[Sequence[bytes]] = None) -> Block:
+                     record_batch: Optional[Records] = None,
+                     chunk_size: int = 1) -> Block:
         """Seal a block. ``record_batch`` (canonically-encoded per-worker
         settlement records) is Merkle-committed into the block hash via
-        ``records_root``; the records themselves stay off-chain but
-        per-record auditable (``merkle_proof``)."""
+        ``records_root`` with ``chunk_size`` records per leaf; the records
+        themselves stay off-chain but per-record auditable
+        (``merkle_proof`` / ``record_chunk``)."""
         root = ""
         tree = None
-        if record_batch:
-            tree = MerkleTree(record_batch)
+        if record_batch is not None and len(record_batch):
+            tree = MerkleTree(record_batch, chunk_size)
             root = tree.root
         blk = Block(len(self.blocks), self.head.hash, list(transactions),
                     time.monotonic() if timestamp is None else timestamp,
                     records_root=root)
         blk.hash = blk.compute_hash()
         # verification pass every append (each node re-hashes the new block);
-        # batched commits add their 2n−1 Merkle hashes
+        # batched commits add their ~2·ceil(n/k)−1 Merkle hashes
         self.work_units += 1 + len(transactions)
         if tree is not None:
             self.work_units += tree.hash_ops
-            self._record_batches[blk.index] = list(record_batch)
+            self._record_batches[blk.index] = (
+                record_batch if isinstance(record_batch, RecordBatch)
+                else list(record_batch))
             self._record_trees[blk.index] = tree
+            self._record_chunks[blk.index] = chunk_size
         self.blocks.append(blk)
         return blk
 
@@ -170,7 +244,8 @@ class Ledger:
             if blk.prev_hash != prev or blk.hash != blk.compute_hash():
                 return False
             if deep and blk.index in self._record_batches:
-                if (MerkleTree(self._record_batches[blk.index]).root
+                if (MerkleTree(self._record_batches[blk.index],
+                               self._record_chunks[blk.index]).root
                         != blk.records_root):
                     return False
             prev = blk.hash
@@ -178,40 +253,66 @@ class Ledger:
 
     # -- per-record audit -----------------------------------------------------
 
-    def record_batch(self, block_index: int) -> List[bytes]:
+    def record_batch(self, block_index: int) -> Records:
         return self._record_batches[block_index]
 
-    def merkle_proof(self, block_index: int,
-                     leaf_index: int) -> List[Tuple[str, str]]:
-        """O(log n) inclusion proof for one settlement record of a batched
-        block — auditing worker w never rehashes the whole round."""
-        return self._record_trees[block_index].proof(leaf_index)
+    def record_chunk_size(self, block_index: int) -> int:
+        return self._record_chunks[block_index]
 
-    def verify_record(self, block_index: int, leaf_index: int,
+    def merkle_proof(self, block_index: int,
+                     record_index: int) -> List[Tuple[str, str]]:
+        """O(log(n/k)) node path for the chunk holding one settlement record
+        of a batched block — auditing worker w never rehashes the round."""
+        return self._record_trees[block_index].record_proof(record_index)
+
+    def record_chunk(self, block_index: int,
+                     record_index: int) -> Tuple[List[bytes], int]:
+        """The chunk of records whose leaf commits ``record_index``, plus
+        the record's offset within it — what an auditor ships alongside the
+        node path so a verifier can recompute the leaf."""
+        records = self._record_batches[block_index]
+        k = self._record_chunks[block_index]
+        start = (record_index // k) * k
+        stop = min(start + k, len(records))
+        return [bytes(records[i]) for i in range(start, stop)], \
+            record_index - start
+
+    def verify_record(self, block_index: int, record_index: int,
                       leaf: Optional[bytes] = None,
                       proof: Optional[Sequence[Tuple[str, str]]] = None
                       ) -> bool:
-        """Check one record against the on-chain root (leaf/proof default to
-        the ledger's own stored copies; pass externally-held values to audit
-        a third party's claim)."""
+        """Check one record against the on-chain root (record/proof default
+        to the ledger's own stored copies; pass externally-held values to
+        audit a third party's claim). The leaf is recomputed from the
+        record's chunk with ``leaf`` substituted at the record's offset."""
         blk = self.blocks[block_index]
         if not blk.records_root:
             return False
-        if leaf is None:
-            leaf = self._record_batches[block_index][leaf_index]
+        chunk, offset = self.record_chunk(block_index, record_index)
+        if leaf is not None:
+            chunk[offset] = leaf
         if proof is None:
-            proof = self.merkle_proof(block_index, leaf_index)
-        return MerkleTree.verify(leaf, proof, blk.records_root)
+            proof = self.merkle_proof(block_index, record_index)
+        return MerkleTree.verify(b"".join(chunk), proof, blk.records_root)
 
-    def tamper_record(self, block_index: int, leaf_index: int,
+    def tamper_record(self, block_index: int, record_index: int,
                       leaf: bytes) -> None:
         """Test hook: corrupt an off-chain settlement record in place."""
-        self._record_batches[block_index][leaf_index] = leaf
+        batch = self._record_batches[block_index]
+        if isinstance(batch, RecordBatch):     # materialize to a mutable list
+            batch = self._record_batches[block_index] = list(batch)
+        batch[record_index] = leaf
+
+    @staticmethod
+    def randomness_from(head_hash: str, round_index: int) -> int:
+        """Deterministic on-chain randomness (leader rotation seed) derived
+        from a chain-head hash — every node derives the same leader. Static
+        so a pipelined driver can consume a head published by the settler
+        thread without racing live ledger state."""
+        return int(sha256(f"{head_hash}:{round_index}".encode())[:16], 16)
 
     def randomness(self, round_index: int) -> int:
-        """Deterministic on-chain randomness (leader rotation seed) derived
-        from the head block hash — every node derives the same leader."""
-        return int(sha256(f"{self.head.hash}:{round_index}".encode())[:16], 16)
+        return self.randomness_from(self.head.hash, round_index)
 
     def transactions_of_type(self, tx_type: str) -> List[dict]:
         return [tx for blk in self.blocks for tx in blk.transactions

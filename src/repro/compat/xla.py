@@ -1,0 +1,29 @@
+"""Small XLA-client compatibility helpers shared by launch tooling and
+tests (kept free of import side effects — ``launch.dryrun`` sets XLA flags
+at import time, so anything that wants these helpers without forcing a
+512-device host platform imports them from here)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+
+def normalize_cost_analysis(cost: Any) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a plain dict on some
+    jax/jaxlib versions but a one-element list of per-module dicts on
+    others (e.g. jaxlib 0.4.36's PyClient). Normalize to one flat dict
+    ({} when the backend offers no analysis) so callers can just
+    ``.get("flops")``."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: Dict[str, float] = {}
+        for entry in cost:
+            for k, v in entry.items():
+                # per-module entries: costs are additive across modules
+                if isinstance(v, (int, float)) and k in merged \
+                        and isinstance(merged[k], (int, float)):
+                    merged[k] += v
+                else:
+                    merged[k] = v
+        return merged
+    return dict(cost)

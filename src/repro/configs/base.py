@@ -164,6 +164,13 @@ class FederationConfig:
     # aggregation topology
     mode: str = "allreduce"                 # "allreduce" | "head_gather" (paper-faithful)
     head_rotation_seed: int = 0
+    # chain-layer scaling knobs
+    merkle_chunk_size: int = 64             # settlement records per Merkle
+                                            # leaf (commit hashes ~2W/k nodes;
+                                            # proofs O(log(W/k)) + k)
+    pipeline_depth: int = 2                 # pending rounds the background
+                                            # settler may hold (0 = settle
+                                            # inline on the training thread)
 
 
 @dataclass(frozen=True)

@@ -4,31 +4,48 @@
 IPFS publication of cluster/global aggregates, deterministic head rotation
 from on-chain randomness, and optional asynchronous arrivals.
 
-Pipelined round driver: ``run_round`` dispatches round r's jitted
-``_round_fn`` *before* doing round r−1's host-side chain work, so contract
-settlement / Merkle commitment / IPFS publication overlap device execution
-instead of serializing behind a ``block_until_ready`` barrier. Scores are
-fetched with an async device→host copy; the only sync point is reading the
-materialized scores of the round just dispatched. Settlement therefore
-trails training by exactly one round; ``flush()`` (called by ``finalize``
-and safe to call any time) settles the trailing round. Decision sequences
-are unchanged versus the serial driver: head rotation for round r still
-sees the chain head of round r−1's block, and reputation-weighted election
-still sees scores through round r−1.
+Threaded multi-round pipeline: ``run_round`` dispatches round r's jitted
+``_round_fn`` and hands round r−1's host-side chain work (contract
+settlement, chunked Merkle commitment, IPFS publication) to a background
+*settler* — a single worker thread draining a bounded queue of pending
+rounds (``fed.pipeline_depth``; 0 settles inline, reproducing the serial
+driver). Chain work therefore never occupies the training thread: the
+training-path ``chain_time`` is the queue handoff only, and multiple
+rounds can be in flight (round r computing on device while the settler
+works the backlog) instead of settlement trailing by exactly one round.
+
+Decision sequences are byte-identical to the serial driver: the settler
+publishes each settled round's chain head, and round r's head rotation
+blocks only at the point it consumes the head of round r−1's block
+(reputation-weighted election likewise waits for reputation through round
+r−1 before electing). Blocks are sealed at logical (round-indexed)
+timestamps, so serial and threaded runs — and every node re-deriving the
+chain — agree on block hashes, on-chain randomness, and elections.
+Settled state (ledger blocks, contract balances, reputation, per-round
+``penalties``/``model_cid``/``settle_time``) is written by the settler
+thread; read it after ``flush()`` (called by ``finalize``, idempotent,
+safe to call mid-queue — it drains the backlog), or rely on the fact that
+rounds ≤ r−1 are settled once ``run_round(r)`` returns whenever head
+rotation consumes chain heads. Settler exceptions are re-raised on the
+training thread at the next ``run_round``/``flush``.
 
 Chain work is array-native end to end: workers are integer ids on the
-struct-of-arrays contract (``settle_round_batch``), blocks commit per-worker
-records via a Merkle root rather than W transaction dicts, and the round's
-global model is serialized to IPFS once, with the C cluster heads
-registering the same cid (identical fully-synchronized tree — one put, C
-registrations).
+struct-of-arrays contract (``settle_round_batch``), blocks commit
+per-worker records via a chunked Merkle root (``fed.merkle_chunk_size``
+records per leaf — ~2·W/k hashes per commit) rather than W transaction
+dicts, and the round's global model is serialized to IPFS once, with the C
+cluster heads registering the same cid (identical fully-synchronized tree
+— one put, C registrations).
 
 Runs the paper's small-scale experiments end-to-end on CPU (Figs. 2-6);
 the same jitted round is what the production launcher shards over pods.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
+import weakref
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
@@ -57,17 +74,150 @@ class RoundRecord:
     heads: List[int]
     model_cid: str                 # "" until settled
     wall_time: float
-    chain_time: float              # host chain work done during this call
-                                   # (the *previous* round's settlement)
+    chain_time: float              # chain work charged to the training
+                                   # thread during this call (threaded
+                                   # settler: the queue handoff only)
     participation: Optional[np.ndarray] = None
     settled: bool = False
+    settle_time: float = 0.0       # host chain work on the settler thread
+                                   # (contract + Merkle + IPFS); set when
+                                   # the round settles
 
 
 @dataclass
 class _PendingRound:
     record: RoundRecord
-    params: Any                    # round's resulting global params (device)
+    params: Any                    # round's resulting global params (device);
+                                   # None when running without a chain
     scores: np.ndarray
+
+
+class _ChainSettler:
+    """Background chain worker: one daemon thread consuming a bounded queue
+    of pending rounds, settling each in submission order and publishing the
+    resulting chain head per round.
+
+    The training thread interacts through three calls: ``submit`` (the
+    queue handoff — blocks only when ``depth`` rounds are already in
+    flight), ``wait_settled(r)`` (returns round r's published chain head,
+    blocking until the settler has produced it — the *only* point the
+    pipeline couples back to chain state, because round r+1's on-chain
+    randomness needs round r's block hash), and ``flush`` (drain
+    everything submitted; idempotent). A settle exception is sticky: the
+    settler stops settling (queued rounds are drained and discarded so
+    nothing commits on top of a half-settled chain) and every subsequent
+    interaction re-raises on the training thread.
+
+    The protocol is held through a weak reference and the worker wakes
+    periodically while idle, so an abandoned (never-finalized) protocol is
+    still garbage-collectable and its settler thread exits instead of
+    pinning params/ledger for the life of the process."""
+
+    _IDLE_POLL_S = 2.0
+
+    def __init__(self, settle_fn: Callable[["_PendingRound"], Optional[str]],
+                 depth: int, initial_head: Optional[str]) -> None:
+        # weak: the thread must not keep the owning protocol alive
+        self._settle = weakref.WeakMethod(settle_fn)
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
+        self._cv = threading.Condition()
+        self._submitted = -1
+        self._settled = -1
+        self._heads: Dict[int, Optional[str]] = {-1: initial_head}
+        self._error: Optional[BaseException] = None
+        self._stopped = False
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="sdflb-chain-settler")
+        self._thread.start()
+
+    # -- worker side ---------------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            try:
+                item = self._q.get(timeout=self._IDLE_POLL_S)
+            except queue.Empty:
+                if self._settle() is None:         # owner got collected
+                    return
+                continue
+            if item is None:                       # stop sentinel
+                return
+            ridx = item.record.round_index
+            settle = self._settle()
+            with self._cv:
+                failed = self._error is not None
+            if settle is None or failed:
+                # after a failure (or owner collection) drain-and-discard:
+                # never commit later rounds on top of a half-settled chain,
+                # but keep waking flush()/submit() callers
+                del item, settle
+                with self._cv:
+                    self._settled = max(self._settled, ridx)
+                    self._cv.notify_all()
+                continue
+            try:
+                head = settle(item)
+            except BaseException as e:             # sticky; surfaced on the
+                with self._cv:                     # training thread
+                    self._error = e
+                    self._settled = max(self._settled, ridx)
+                    self._cv.notify_all()
+                continue
+            finally:
+                # frame locals survive across iterations — dropping them
+                # here keeps the idle thread from pinning the protocol (and
+                # the settled round's params) against garbage collection
+                del item, settle
+            with self._cv:
+                self._settled = ridx
+                if head is not None:   # chainless runs never consume heads —
+                    self._heads[ridx] = head   # don't grow the dict forever
+                self._cv.notify_all()
+
+    # -- training-thread side ------------------------------------------------
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError(
+                "background chain settlement failed; the settler has "
+                "stopped (unsettled rounds were discarded)") from self._error
+
+    def submit(self, pending: "_PendingRound") -> None:
+        with self._cv:
+            self._check_error()
+            if self._stopped:
+                raise RuntimeError("settler already stopped")
+            self._submitted = pending.record.round_index
+        self._q.put(pending)                       # bounded: backpressure
+
+    def wait_settled(self, round_index: int) -> Optional[str]:
+        """Block until round ``round_index`` is settled; return its
+        published chain head hash (None when running without a ledger)."""
+        with self._cv:
+            self._cv.wait_for(lambda: self._settled >= round_index
+                              or self._error is not None)
+            self._check_error()
+            head = self._heads.get(round_index)
+            # prune heads no one can ask for again (heads are consumed in
+            # round order; keep the latest two for idempotent re-reads)
+            for k in [k for k in self._heads if k < round_index - 1]:
+                del self._heads[k]
+            return head
+
+    def flush(self) -> None:
+        """Drain the queue: block until everything submitted has settled."""
+        with self._cv:
+            self._cv.wait_for(lambda: self._settled >= self._submitted
+                              or self._error is not None)
+            self._check_error()
+
+    def stop(self) -> None:
+        """Flush, then terminate the worker thread (idempotent)."""
+        self.flush()
+        if not self._stopped:
+            self._stopped = True
+            self._q.put(None)
+            self._thread.join()
 
 
 class SDFLBProtocol:
@@ -112,7 +262,8 @@ class SDFLBProtocol:
             self.contract = TrustContract(
                 self.ledger, requester_deposit=fed.requester_deposit,
                 worker_stake=fed.worker_stake, penalty_pct=fed.penalty_pct,
-                trust_threshold=fed.trust_threshold, top_k=fed.top_k_rewarded)
+                trust_threshold=fed.trust_threshold, top_k=fed.top_k_rewarded,
+                merkle_chunk_size=fed.merkle_chunk_size)
             self.contract.join_batch(self.W)   # integer ids, one batch tx
         self.history: List[RoundRecord] = []
         self.heads = [0] * fed.num_clusters
@@ -125,12 +276,25 @@ class SDFLBProtocol:
                                          fed.num_clusters)
                          if use_blockchain else None)
         self._pending: Optional[_PendingRound] = None
+        # depth > 0: chain work runs on the settler thread; 0: inline (the
+        # serial reference driver the equivalence property test pins)
+        self._settler: Optional[_ChainSettler] = None
+        if fed.pipeline_depth > 0:
+            self._settler = _ChainSettler(
+                self._settle_one, fed.pipeline_depth,
+                self.ledger.head.hash if self.ledger is not None else None)
 
     # -- head rotation from on-chain randomness ------------------------------
 
-    def _rotate_heads(self, round_index: int) -> List[int]:
+    def _rotate_heads(self, round_index: int,
+                      head_hash: Optional[str] = None) -> List[int]:
+        """``head_hash``: the chain head the rotation must see (round
+        r−1's block) — published by the settler in threaded mode; defaults
+        to the live ledger head (serial mode, where it is the same block)."""
         if self.ledger is not None:
-            seed = self.ledger.randomness(round_index)
+            if head_hash is None:
+                head_hash = self.ledger.head.hash
+            seed = Ledger.randomness_from(head_hash, round_index)
         else:
             seed = (self.fed.head_rotation_seed * 1_000_003 + round_index)
         wpc = self.fed.workers_per_cluster
@@ -145,13 +309,16 @@ class SDFLBProtocol:
                           for _ in range(self.fed.num_clusters)]
         return self.heads
 
-    # -- deferred chain work (round r settles during round r+1's device exec) -
+    # -- deferred chain work (runs on the settler thread at depth > 0) --------
 
-    def _settle_pending(self) -> None:
-        p, self._pending = self._pending, None
-        if p is None:
-            return
+    def _settle_one(self, p: _PendingRound) -> Optional[str]:
+        """Settle one pending round: IPFS publication, cross-cluster cid
+        registration, contract settlement with the chunked Merkle commit,
+        and the reputation update. Returns the resulting chain head hash
+        (the block other rounds' randomness derives from)."""
+        t0 = time.monotonic()
         ridx = p.record.round_index
+        head = None
         if self.use_blockchain:
             # one IPFS put of the (identical) global tree; every cluster
             # head registers the cid for the cross-cluster hash exchange
@@ -160,20 +327,38 @@ class SDFLBProtocol:
             for c in range(self.fed.num_clusters):
                 self.exchange.register(ridx, c, cid)
             self.contract.pending.extend(self.exchange.round_transactions(ridx))
-            pen = self.contract.settle_round_batch(ridx, p.scores,
-                                                   model_cid=cid)
+            # logical timestamp: every node (and the serial reference
+            # driver) seals byte-identical blocks for the same round
+            pen = self.contract.settle_round_batch(
+                ridx, p.scores, model_cid=cid, timestamp=float(ridx + 1))
             p.record.model_cid = cid
             p.record.penalties = pen
             assert self.ledger.verify_chain()
+            head = self.ledger.head.hash
             bad = p.scores < self.contract.T
         else:
             bad = np.zeros(self.W, bool)
         self.reputation.update(p.scores, penalized=bad)
+        p.record.settle_time = time.monotonic() - t0
         p.record.settled = True
+        return head
+
+    def _hand_off_pending(self) -> None:
+        p, self._pending = self._pending, None
+        if p is None:
+            return
+        if self._settler is not None:
+            self._settler.submit(p)        # queue handoff; work happens on
+        else:                              # the settler thread
+            self._settle_one(p)
 
     def flush(self) -> None:
-        """Settle the trailing round (no-op when nothing is pending)."""
-        self._settle_pending()
+        """Settle every round still in flight: hand off the trailing
+        pending round and drain the settler queue. Idempotent and safe to
+        call mid-queue (no-op when nothing is pending)."""
+        self._hand_off_pending()
+        if self._settler is not None:
+            self._settler.flush()
 
     # -- one full protocol round ----------------------------------------------
 
@@ -205,14 +390,25 @@ class SDFLBProtocol:
         except AttributeError:     # backend without async host copies
             pass
 
-        # 2. previous round's host chain work overlaps this round's compute
+        # 2. hand the previous round's host chain work to the settler
+        #    (threaded: a queue put; depth 0: settle inline) — either way it
+        #    overlaps this round's device compute
         tc0 = time.monotonic()
-        self._settle_pending()
+        self._hand_off_pending()
         chain_time = time.monotonic() - tc0
 
-        # 3. rotate heads for this round — the chain head is now the
-        #    previous round's block, exactly as in the serial driver
-        heads = self._rotate_heads(ridx)
+        # 3. rotate heads for this round. On-chain randomness needs round
+        #    r−1's block hash (and reputation election its scores), so this
+        #    is the one point the pipeline consumes settled state: block on
+        #    the settler's published head for round r−1 — exactly the chain
+        #    head the serial driver sees. Without chain or reputation
+        #    election the rotation seed is settlement-free and rounds run
+        #    arbitrarily deep into the queue.
+        head_hash = None
+        if self._settler is not None and (self.use_blockchain
+                                          or self.reputation_leaders):
+            head_hash = self._settler.wait_settled(ridx - 1)
+        heads = self._rotate_heads(ridx, head_hash)
 
         # 4. the only training-path sync point: this round's scores
         scores = np.asarray(out.scores)
@@ -226,7 +422,10 @@ class SDFLBProtocol:
             chain_time=chain_time,
             participation=None if participation is None
             else np.asarray(participation))
-        self._pending = _PendingRound(rec, self.global_params, scores)
+        # chainless settlement only reads scores — don't pin up to
+        # pipeline_depth extra param trees in the queue for nothing
+        self._pending = _PendingRound(
+            rec, self.global_params if self.use_blockchain else None, scores)
         self.history.append(rec)
         return rec
 
@@ -246,7 +445,11 @@ class SDFLBProtocol:
         return {k: np.asarray(v) for k, v in metrics.items()}
 
     def finalize(self) -> Dict[str, float]:
-        self.flush()               # settle the trailing pipelined round
+        self.flush()               # drain every in-flight pipelined round
+        if self._settler is not None:
+            self._settler.stop()
+            self._settler = None
         if self.contract is not None:
-            return self.contract.finalize()
+            return self.contract.finalize(
+                timestamp=float(len(self.history) + 1))
         return {}

@@ -18,6 +18,7 @@ import traceback
 
 import jax
 
+from repro.compat.xla import normalize_cost_analysis
 from repro.configs.base import FederationConfig
 from repro.configs.registry import ARCH_IDS, INPUT_SHAPES, applicable
 from repro.launch import mesh as meshlib
@@ -180,13 +181,14 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         output_size_in_bytes = alias_size_in_bytes = 0
 
     mem = compiled.memory_analysis() or _NoMem()
-    cost = compiled.cost_analysis()
+    # list-of-dicts on this jaxlib; normalized so .get works everywhere
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll_total, coll_breakdown = collective_bytes(hlo)
 
     n_dev = mesh.devices.size
-    flops_total = float(cost.get("flops", 0.0)) if cost else 0.0
-    bytes_total = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    flops_total = float(cost.get("flops", 0.0))
+    bytes_total = float(cost.get("bytes accessed", 0.0))
     # cost_analysis of an SPMD module reports per-partition numbers
     compute_s = flops_total / meshlib.PEAK_FLOPS_BF16
     memory_s = bytes_total / meshlib.HBM_BW

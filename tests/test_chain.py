@@ -297,10 +297,99 @@ def test_settlement_scales_to_100k_workers_under_1s():
     bad = int((scores < 0.5).sum())
     assert int((pen > 0).sum()) == bad
     assert c.requester_balance == pytest.approx(bad * 5.0)
-    # spot-audit one worker without rehashing the round
+    # spot-audit one worker without rehashing the round: the node path is
+    # over chunk leaves (64 records each), so ceil(log2(ceil(100k/64)))
     proof = c.settlement_proof(0, 31_337)
     assert c.verify_settlement(proof)
-    assert len(proof["proof"]) == 17            # ceil(log2(100k))
+    import math
+    assert len(proof["proof"]) == math.ceil(math.log2(math.ceil(W / 64)))
+    assert len(proof["chunk"]) == 64
+    assert proof["chunk"][proof["offset"]] == proof["leaf"]
+
+
+def test_chunked_root_with_chunk_size_one_matches_per_record_root():
+    """chunk_size=1 must reproduce the per-record tree bit-for-bit (and
+    both must match an independent reimplementation of the hash rule)."""
+    import hashlib
+    records = [f"rec-{i}".encode() for i in range(7)]
+    per_record = MerkleTree(records)               # default: one record/leaf
+    chunk1 = MerkleTree(records, chunk_size=1)
+    assert chunk1.root == per_record.root
+    # independent recomputation of the 7-leaf root (promote-unpaired rule)
+    lvl = [hashlib.sha256(b"\x00" + r).digest() for r in records]
+    while len(lvl) > 1:
+        nxt = [hashlib.sha256(b"\x01" + lvl[i] + lvl[i + 1]).digest()
+               for i in range(0, len(lvl) - 1, 2)]
+        if len(lvl) % 2:
+            nxt.append(lvl[-1])
+        lvl = nxt
+    assert per_record.root == lvl[0].hex()
+    # chunking changes the root (different leaf bytes) but not the records
+    assert MerkleTree(records, chunk_size=3).root != per_record.root
+
+
+@pytest.mark.parametrize("chunk_size", [1, 3, 64, 10])
+def test_chunked_proofs_verify_and_tampering_fails(chunk_size):
+    """Across chunk sizes {1, 3, 64, W}: every worker's settlement proof
+    verifies, tampered records fail both the proof and deep chain
+    verification, and hash work shrinks to ~2·ceil(W/k) nodes."""
+    W = 10                                         # chunk_size=10 == W
+    led = Ledger()
+    c = TrustContract(led, requester_deposit=100.0, worker_stake=10.0,
+                      penalty_pct=50.0, trust_threshold=0.5, top_k=2,
+                      merkle_chunk_size=chunk_size)
+    c.join_batch(W)
+    scores = np.linspace(0.05, 0.95, W)
+    pen = c.settle_round_batch(0, scores)
+    assert led.verify_chain(deep=True)
+    n_leaves = -(-W // chunk_size)                 # ceil
+    tree = led._record_trees[led.head.index]
+    assert tree.num_leaves == n_leaves
+    # ~2n−1 (+ promoted odd nodes, one per level at most)
+    assert tree.hash_ops <= 2 * n_leaves + len(tree.levels)
+    for w in range(W):
+        proof = c.settlement_proof(0, w)
+        assert c.verify_settlement(proof)
+        assert len(proof["chunk"]) <= chunk_size
+        rec = proof["record"]
+        assert rec["worker"] == w
+        assert rec["score"] == pytest.approx(scores[w])
+        assert rec["penalty"] == pytest.approx(pen[w])
+        assert led.verify_record(led.head.index, w)
+        # a proof whose claimed record disagrees with its chunk is rejected
+        forged = dict(proof, leaf=b"\x00" * len(proof["leaf"]))
+        assert not c.verify_settlement(forged)
+        # ... as is a doctored human-readable view over an authentic leaf,
+        # and malformed offsets are rejected, not raised on
+        assert not c.verify_settlement(
+            dict(proof, record={**proof["record"], "score": 0.99}))
+        assert not c.verify_settlement(dict(proof, offset=99))
+        assert not c.verify_settlement(dict(proof, offset=-1))
+    # tamper one stored record: its proof and deep verification both break,
+    # the shallow hash chain stays intact
+    victim = W // 2
+    led.tamper_record(led.head.index, victim, b"x" * 40)
+    assert led.verify_chain() and not led.verify_chain(deep=True)
+    assert not led.verify_record(led.head.index, victim)
+
+
+def test_chunked_commit_hashes_fewer_nodes_and_same_settlement():
+    """Chunked vs per-record commits: identical Algorithm 1 outcome,
+    ~k-fold fewer ledger work units for the commit."""
+    W = 512
+    scores = np.random.default_rng(3).random(W)
+    outs = {}
+    for k in (1, 64):
+        led = Ledger()
+        c = TrustContract(led, requester_deposit=1e4, worker_stake=10.0,
+                          penalty_pct=50.0, trust_threshold=0.5, top_k=8,
+                          merkle_chunk_size=k)
+        c.join_batch(W)
+        pen = c.settle_round_batch(0, scores)
+        outs[k] = (pen, c.stake.copy(), led.work_units)
+    np.testing.assert_allclose(outs[1][0], outs[64][0])
+    np.testing.assert_allclose(outs[1][1], outs[64][1])
+    assert outs[64][2] < outs[1][2] / 8            # far fewer hash ops
 
 
 def test_finalize_with_zero_top_k_pays_refunds_only():

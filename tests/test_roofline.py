@@ -10,6 +10,7 @@ import pytest
 
 sys.path.insert(0, ".")   # benchmarks package lives at repo root
 from benchmarks import analytic
+from repro.compat.xla import normalize_cost_analysis
 from repro.configs.registry import ARCH_IDS, INPUT_SHAPES, applicable, get_config
 from repro.models import api
 
@@ -38,7 +39,9 @@ def test_cost_analysis_counts_scan_body_once():
         return jax.lax.scan(body, x, ws)[0]
     ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    flops = jax.jit(f_scan).lower(ws, x).compile().cost_analysis()["flops"]
+    cost = normalize_cost_analysis(
+        jax.jit(f_scan).lower(ws, x).compile().cost_analysis())
+    flops = cost["flops"]
     assert abs(flops - 2 * 128 ** 3) / (2 * 128 ** 3) < 0.01   # body, once
 
 

@@ -60,8 +60,13 @@ def test_blockchain_off_same_learning_dynamics():
     a_on = p_on.evaluate(ev)["accuracy"]
     a_off = p_off.evaluate(ev)["accuracy"]
     assert abs(a_on - a_off) < 1e-6            # identical learning updates
-    assert sum(r.chain_time for r in p_on.history) > \
-        sum(r.chain_time for r in p_off.history)
+    # chain work is real but runs on the settler thread: compare the
+    # settler-side settle_time (chain: IPFS + contract + Merkle; off: the
+    # reputation update only) after draining the pipeline
+    p_on.flush()
+    p_off.flush()
+    assert sum(r.settle_time for r in p_on.history) > \
+        sum(r.settle_time for r in p_off.history)
 
 
 def test_malicious_worker_penalized_on_chain():
@@ -152,6 +157,110 @@ def test_async_scheduler_faster_than_sync():
         t_prev = t
     sync_times = [sched.sync_round_time() for _ in range(10)]
     assert np.mean(async_gaps) < np.mean(sync_times)
+
+
+def _decision_trace(proto):
+    """Everything the threaded driver must reproduce byte-identically:
+    block hashes (covering randomness sources, Merkle roots, transactions),
+    per-round head elections, penalties, and reputation state."""
+    return {
+        "blocks": [b.hash for b in proto.ledger.blocks],
+        "heads": [tuple(r.heads) for r in proto.history],
+        "penalties": np.stack([r.penalties for r in proto.history]),
+        "cids": [r.model_cid for r in proto.history],
+        "reputation": (proto.reputation.scores.copy(),
+                       proto.reputation.penalties.copy()),
+    }
+
+
+@pytest.mark.parametrize("reputation_leaders", [False, True])
+def test_threaded_settler_matches_serial_driver(reputation_leaders):
+    """Property: the background-settler pipeline produces identical blocks,
+    on-chain randomness, head elections, penalties, reputation, and payouts
+    as the serial (pipeline_depth=0) reference driver on the same data."""
+    cfg = get_config("paper-net")
+    fed = FederationConfig(num_clusters=2, workers_per_cluster=3,
+                           trust_threshold=0.45, top_k_rewarded=3)
+    runs = {}
+    for depth in (0, 3):
+        ds = make_federated_mnist(6, samples=768, seed=5)
+        proto = SDFLBProtocol(cfg, dataclasses.replace(fed,
+                                                       pipeline_depth=depth),
+                              TC, use_blockchain=True, seed=11,
+                              reputation_leaders=reputation_leaders)
+        for _ in range(8):
+            proto.run_round(ds.round_batches(32))
+        proto.flush()
+        payouts = proto.finalize()
+        assert proto.ledger.verify_chain(deep=True)
+        runs[depth] = (_decision_trace(proto), payouts)
+    serial, threaded = runs[0], runs[3]
+    assert serial[0]["blocks"] == threaded[0]["blocks"]   # byte-identical
+    assert serial[0]["heads"] == threaded[0]["heads"]
+    assert serial[0]["cids"] == threaded[0]["cids"]
+    np.testing.assert_array_equal(serial[0]["penalties"],
+                                  threaded[0]["penalties"])
+    np.testing.assert_array_equal(serial[0]["reputation"][0],
+                                  threaded[0]["reputation"][0])
+    np.testing.assert_array_equal(serial[0]["reputation"][1],
+                                  threaded[0]["reputation"][1])
+    assert serial[1] == threaded[1]                       # payouts
+
+
+def test_flush_is_idempotent_and_safe_mid_queue():
+    """flush() drains in-flight rounds whenever called, repeated calls are
+    no-ops, and training continues cleanly after a mid-queue flush."""
+    cfg = get_config("paper-net")
+    ds = make_federated_mnist(3, samples=512, seed=0)
+    proto = SDFLBProtocol(cfg, FED3, TC, use_blockchain=True, seed=0)
+    _run(proto, ds, 3)
+    proto.flush()
+    assert all(r.settled for r in proto.history)
+    blocks_after_first = len(proto.ledger.blocks)
+    assert blocks_after_first == 4             # genesis + 3 settled rounds
+    proto.flush()                              # idempotent
+    proto.flush()
+    assert len(proto.ledger.blocks) == blocks_after_first
+    _run(proto, ds, 2)                         # pipeline keeps working
+    proto.flush()
+    assert len(proto.ledger.blocks) == 6
+    assert all(r.settled for r in proto.history)
+    assert proto.ledger.verify_chain(deep=True)
+    proto.finalize()
+    assert len(proto.ledger.blocks) == 7       # + finalize block
+
+
+def test_settler_failure_is_sticky_and_commits_nothing_after():
+    """A settle failure surfaces on the training thread, keeps re-raising
+    (sticky), and later queued rounds are discarded rather than committed
+    on top of a half-settled chain."""
+    cfg = get_config("paper-net")
+    ds = make_federated_mnist(3, samples=256, seed=0)
+    proto = SDFLBProtocol(cfg, FED3, TC, use_blockchain=True, seed=0)
+    proto.run_round(ds.round_batches(16))
+    proto.contract.closed = True               # force settlement to fail
+    with pytest.raises(RuntimeError):
+        proto.run_round(ds.round_batches(16))  # surfaces at wait/handoff
+    with pytest.raises(RuntimeError):
+        proto.flush()
+    with pytest.raises(RuntimeError):          # sticky
+        proto.flush()
+    assert len(proto.ledger.blocks) == 1       # genesis only — no partial
+                                               # chain from later rounds
+
+
+def test_deep_pipeline_without_chain_keeps_rounds_in_flight():
+    """With blockchain and reputation election off, nothing couples round
+    r to round r−1's settlement — rounds queue up to pipeline_depth and a
+    flush settles them all."""
+    cfg = get_config("paper-net")
+    fed = dataclasses.replace(FED3, pipeline_depth=4)
+    ds = make_federated_mnist(3, samples=512, seed=0)
+    proto = SDFLBProtocol(cfg, fed, TC, use_blockchain=False, seed=0)
+    _run(proto, ds, 6)
+    proto.flush()
+    assert all(r.settled for r in proto.history)
+    assert proto.reputation.rounds == 6
 
 
 def test_dirichlet_partition_covers_all_samples():
