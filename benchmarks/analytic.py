@@ -24,10 +24,9 @@ Conventions (documented in EXPERIMENTS.md):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
-from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.configs.registry import get_config, get_shape
 from repro.models.ssm import MAMBA_HEAD_DIM
 

@@ -7,7 +7,6 @@ Heterogeneous worker speeds (25% stragglers, 4-8x slower). Compare:
 Measures simulated wall-clock to reach a loss target + failure resilience."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import csv_row, paper_protocol
 from repro.core import async_sim

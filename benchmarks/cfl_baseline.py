@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 from benchmarks.common import csv_row, paper_protocol, run_rounds
 from repro.data.datasets import make_federated_mnist

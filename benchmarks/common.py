@@ -9,7 +9,6 @@ import numpy as np
 from repro.configs.base import FederationConfig, TrainConfig
 from repro.configs.registry import get_config
 from repro.core.protocol import SDFLBProtocol
-from repro.data.datasets import make_federated_mnist
 
 PAPER_TC = TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd", remat=False)
 
@@ -63,3 +62,16 @@ def csv_row(name: str, us: float, derived: str = "") -> str:
     row = f"{name},{us:.1f},{derived}"
     print(row)
     return row
+
+
+def bench_json(name: str, payload: Dict, directory: str = ".") -> str:
+    """Write ``BENCH_<name>.json`` — the machine-readable benchmark artifact
+    the CI benchmarks job uploads (and the repo commits) so the perf
+    trajectory is diffable across PRs."""
+    import json
+    import pathlib
+
+    path = pathlib.Path(directory) / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {path}")
+    return str(path)

@@ -7,7 +7,6 @@ Compares simulated wall-clock against the synchronous barrier.
 
     PYTHONPATH=src python examples/async_federation.py
 """
-import numpy as np
 
 from repro.configs.base import FederationConfig, TrainConfig
 from repro.configs.registry import get_config

@@ -6,7 +6,6 @@ Algorithm 1 penalties, and the accuracy protection vs an unprotected run.
 
     PYTHONPATH=src python examples/poisoning_defense.py
 """
-import numpy as np
 
 from repro.configs.base import FederationConfig, TrainConfig
 from repro.configs.registry import get_config

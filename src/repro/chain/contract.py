@@ -25,6 +25,20 @@ instead of ~2·W while balances stay fully auditable — per-worker via
 O(log(W/k) + k) proofs (``settlement_proof``: the record's chunk plus the
 node path) rather than per-worker embedded transactions.
 
+Sharded settlement (``settlement_shards`` > 1): a round is partitioned
+into contiguous slices of the struct-of-arrays state — each shard's
+``settle_shard`` computes its slice's BadWorkers mask, penalties and
+chunked Merkle subtree *without mutating contract state*, so slices run
+concurrently on a settler pool. A deterministic merge (shard order ==
+worker-id order) then applies the state transition from the concatenated
+per-shard results and seals the block over the cross-shard super-root.
+Shard boundaries are subtree-aligned (``plan_shard_bounds``), making the
+super-root — and hence every block hash, proof, election and penalty —
+bit-identical across shard counts and to the unsharded path; and because
+no state is touched until every shard succeeded, a failing shard leaves
+the contract and chain exactly as before the round (no half-settled
+super-root is ever committed).
+
 The legacy scalar API (``join`` / ``settle_round`` with a score dict /
 dict-like ``workers`` access) is kept as a thin wrapper over the batch
 path, so Algorithm 1 semantics are provably unchanged (see the
@@ -32,15 +46,27 @@ batch-vs-scalar equivalence property test in ``tests/test_chain.py``).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, Iterator, List, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.chain.ledger import Ledger, MerkleTree, RecordBatch
+from repro.chain.ledger import (Ledger, MerkleTree, RecordBatch,
+                                plan_shard_bounds)
 
 
 class ContractError(RuntimeError):
     pass
+
+
+# GIL economics of parallel settlement: a leaf hash releases the GIL only
+# for the duration of its (leaf-sized) update, so with small leaves the
+# release/acquire handoff dominates and concurrent shard hashing *convoys*
+# — measurably slower than serial. Fan shards out to the worker pool only
+# when each chunk leaf is big enough to amortize the handoff (measured
+# crossover ~32 KiB on a 2-core host); below that the sharded commit still
+# runs (same bytes, same root), just on the calling thread.
+MIN_PARALLEL_LEAF_BYTES = 32_768
 
 
 _RECORD_DTYPE = np.dtype([("round", "<i8"), ("worker", "<i8"),
@@ -54,8 +80,9 @@ def encode_settlement_records(round_index: int, worker_ids: np.ndarray,
     """Canonical fixed-width binary encoding of per-worker settlement
     records — the Merkle-committed data of a settlement block. Built
     vectorized into one contiguous buffer; the returned ``RecordBatch``
-    indexes like a list of per-record bytes but lets the chunked Merkle
-    commit slice whole leaves zero-copy."""
+    wraps a memoryview straight onto the array's memory (no ``tobytes``
+    copy — the commit hashes leaves out of the buffer zero-copy) and
+    indexes like a list of per-record bytes."""
     n = len(worker_ids)
     rec = np.empty(n, dtype=_RECORD_DTYPE)
     rec["round"] = round_index
@@ -63,7 +90,7 @@ def encode_settlement_records(round_index: int, worker_ids: np.ndarray,
     rec["score"] = scores
     rec["penalty"] = penalties
     rec["stake_after"] = stakes_after
-    return RecordBatch(rec.tobytes(), _RECORD_DTYPE.itemsize)
+    return RecordBatch(memoryview(rec).cast("B"), _RECORD_DTYPE.itemsize)
 
 
 def decode_settlement_record(leaf: bytes) -> Dict[str, float]:
@@ -71,6 +98,19 @@ def decode_settlement_record(leaf: bytes) -> Dict[str, float]:
     return {"round": int(rec["round"]), "worker": int(rec["worker"]),
             "score": float(rec["score"]), "penalty": float(rec["penalty"]),
             "stake_after": float(rec["stake_after"])}
+
+
+@dataclass
+class ShardSettlement:
+    """One shard's slice of a round, computed by ``settle_shard`` without
+    mutating contract state: the merge barrier applies mutations only after
+    every shard of the round succeeded."""
+    start: int                     # slice [start, stop) of the round's ids
+    stop: int
+    penalties: np.ndarray          # (stop-start,) Pen(w), stake-capped
+    stake_after: np.ndarray        # (stop-start,) post-penalty stakes
+    records: RecordBatch           # canonical encodings of this slice
+    tree: MerkleTree               # chunked Merkle subtree over the slice
 
 
 class WorkerAccount:
@@ -158,17 +198,22 @@ class TrustContract:
     def __init__(self, ledger: Ledger, *, requester_deposit: float,
                  worker_stake: float, penalty_pct: float,
                  trust_threshold: float, top_k: int,
-                 merkle_chunk_size: int = 64) -> None:
+                 merkle_chunk_size: int = 64,
+                 settlement_shards: int = 1) -> None:
         if requester_deposit <= 0:
             raise ContractError("deployment requires a positive deposit")
         if merkle_chunk_size < 1:
             raise ContractError("merkle_chunk_size must be >= 1")
+        if settlement_shards < 1:
+            raise ContractError("settlement_shards must be >= 1")
         self.ledger = ledger
         self.F = worker_stake
         self.P = penalty_pct
         self.T = trust_threshold
         self.k = top_k
         self.merkle_chunk_size = merkle_chunk_size
+        self.settlement_shards = settlement_shards
+        self.min_parallel_leaf_bytes = MIN_PARALLEL_LEAF_BYTES
         self.reward_pool = requester_deposit
         self.requester_balance = 0.0
         # struct-of-arrays account state (amortized-doubling capacity)
@@ -255,16 +300,55 @@ class TrustContract:
 
     # -- per-round settlement (Alg. 1 steps 3-7), batch path ------------------
 
+    def shard_bounds(self, num_records: int) -> List[int]:
+        """Subtree-aligned record boundaries splitting a round of
+        ``num_records`` settlements into ≤ ``settlement_shards`` slices."""
+        return plan_shard_bounds(num_records, self.merkle_chunk_size,
+                                 self.settlement_shards)
+
+    def parallel_fanout_possible(self) -> bool:
+        """Whether ``settle_round_batch`` could ever hand shards to a pool:
+        more than one shard configured AND chunk leaves clear the GIL
+        threshold. Lets callers skip spawning worker threads that the gate
+        would never feed."""
+        return (self.settlement_shards > 1 and
+                self.merkle_chunk_size * _RECORD_DTYPE.itemsize
+                >= self.min_parallel_leaf_bytes)
+
+    def settle_shard(self, round_index: int, ids: np.ndarray, s: np.ndarray,
+                     start: int, stop: int) -> ShardSettlement:
+        """Compute one contract shard's slice [start, stop) of a round —
+        BadWorkers mask, stake-capped penalties, canonical records, chunked
+        Merkle subtree — reading the struct-of-arrays state but mutating
+        nothing, so shards of one round run concurrently on a settler pool
+        (their id slices are disjoint, and the merge applies all mutations
+        afterwards on one thread)."""
+        sl_ids = ids[start:stop]
+        sl_s = s[start:stop]
+        bad = sl_s < self.T                               # BadWorkers
+        stake_sel = self.stake[sl_ids]
+        pen = np.where(bad, np.minimum(self.F * self.P / 100.0, stake_sel),
+                       0.0)                               # Pen(w), stake-capped
+        stake_after = stake_sel - pen
+        records = encode_settlement_records(round_index, sl_ids, sl_s, pen,
+                                            stake_after)
+        return ShardSettlement(start, stop, pen, stake_after, records,
+                               MerkleTree(records, self.merkle_chunk_size))
+
     def settle_round_batch(self, round_index: int, scores: np.ndarray,
                            worker_ids: Optional[np.ndarray] = None,
                            model_cid: str = "",
-                           timestamp: Optional[float] = None) -> np.ndarray:
+                           timestamp: Optional[float] = None,
+                           pool=None) -> np.ndarray:
         """Vectorized settlement: BadWorkers mask, stake-capped penalties,
         requester transfer, and the Merkle-committed round block — no
         per-worker Python loop. ``worker_ids`` defaults to all workers (the
         common full-participation round). ``timestamp`` lets the protocol
         seal blocks at logical (round-indexed) time so every node — and the
         threaded vs serial drivers — computes identical block hashes.
+        ``pool`` (any object with ``map(list_of_thunks)``, e.g.
+        ``repro.core.protocol.ShardWorkerPool``) runs the per-shard slices
+        concurrently; the result is bit-identical with or without it.
         Returns the (len(scores),) penalty vector aligned with ``scores``."""
         if self.closed:
             raise ContractError("task closed")
@@ -285,11 +369,29 @@ class TrustContract:
             if len(np.unique(ids)) != len(ids):
                 raise ContractError("duplicate worker ids in settlement")
 
-        bad = s < self.T                                  # BadWorkers
-        stake_sel = self.stake[ids]
-        pen = np.where(bad, np.minimum(self.F * self.P / 100.0, stake_sel),
-                       0.0)                               # Pen(w), stake-capped
-        stake_after = stake_sel - pen
+        # fan the round out across contract shards (pure compute, no state
+        # mutation — a shard failure aborts the round with nothing applied
+        # and nothing committed)
+        bounds = self.shard_bounds(len(ids))
+        tasks = [lambda a=a, b=b: self.settle_shard(round_index, ids, s, a, b)
+                 for a, b in zip(bounds, bounds[1:])]
+        leaf_bytes = self.merkle_chunk_size * _RECORD_DTYPE.itemsize
+        if pool is not None and len(tasks) > 1 \
+                and leaf_bytes >= self.min_parallel_leaf_bytes:
+            results: List[ShardSettlement] = pool.map(tasks)
+        else:
+            results = [t() for t in tasks]
+
+        # deterministic merge: shard order == id order, so the concatenated
+        # vectors (and every reduction over them) are bit-identical to the
+        # unsharded single-slice path
+        bad = s < self.T
+        if results:
+            pen = np.concatenate([r.penalties for r in results])
+            stake_after = np.concatenate([r.stake_after for r in results])
+        else:
+            pen = np.zeros(0, np.float64)
+            stake_after = np.zeros(0, np.float64)
         self.stake[ids] = stake_after
         self.penalized_rounds[ids] += bad
         self.requester_balance += float(pen.sum())        # step 7
@@ -297,8 +399,6 @@ class TrustContract:
         self.score_count[ids] += 1
         self._score_log.append((ids, s))
 
-        records = encode_settlement_records(round_index, ids, s, pen,
-                                            stake_after)
         txs = self.pending
         self.pending = []
         txs.append({"type": "settlement_batch", "round": round_index,
@@ -309,7 +409,8 @@ class TrustContract:
                         "cid": model_cid})
         blk = self.ledger.append_block(
             txs, timestamp=timestamp,
-            record_batch=records if len(records) else None,
+            record_shards=[r.records for r in results] or None,
+            shard_trees=[r.tree for r in results] or None,
             chunk_size=self.merkle_chunk_size)
         self._round_blocks[round_index] = blk.index
         self._round_ids[round_index] = ids
@@ -402,22 +503,25 @@ class TrustContract:
         to the root through the node path, and the root must match the
         block's on-chain commitment. Malformed (attacker-supplied) proofs
         are rejected, never raised on."""
-        chunk = proof.get("chunk", [proof["leaf"]])
-        offset = proof.get("offset", 0)
-        if not (isinstance(offset, int) and 0 <= offset < len(chunk)):
-            return False
-        if chunk[offset] != proof["leaf"]:
-            return False
-        if "record" in proof:       # the human-readable view is part of the
-            try:                    # claim — it must decode from the leaf
+        try:
+            chunk = proof.get("chunk", [proof["leaf"]])
+            offset = proof.get("offset", 0)
+            if not (isinstance(offset, int) and 0 <= offset < len(chunk)):
+                return False
+            if chunk[offset] != proof["leaf"]:
+                return False
+            if "record" in proof:   # the human-readable view is part of the
+                # claim — it must decode from the leaf
                 if decode_settlement_record(proof["leaf"]) != proof["record"]:
                     return False
-            except (ValueError, IndexError):
-                return False
-        return MerkleTree.verify(b"".join(chunk), proof["proof"],
-                                 proof["root"]) and \
-            proof["root"] == self.ledger.blocks[
-                proof["block_index"]].records_root
+            return MerkleTree.verify(b"".join(chunk), proof["proof"],
+                                     proof["root"]) and \
+                proof["root"] == self.ledger.blocks[
+                    proof["block_index"]].records_root
+        except (TypeError, ValueError, IndexError, KeyError):
+            # any malformed shape — unsized chunk, non-buffer leaf, bad hex
+            # digests or sides, missing keys — is rejected, never raised on
+            return False
 
     def _worker_scores(self, index: int) -> List[float]:
         out = []

@@ -11,7 +11,7 @@ stdlib zlib (same API, blobs stay self-consistent within a process/run).
 from __future__ import annotations
 
 import hashlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import msgpack

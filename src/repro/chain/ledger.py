@@ -26,12 +26,28 @@ its chunk (k records, fixed-width so the offset is unambiguous) plus the
 O(log(W/k)) node path; ``chunk_size=1`` reproduces the per-record tree
 bit-for-bit. ``work_units`` counts the batched cost model: 1 + |txs| per
 block plus the ~2·ceil(n/k)−1 Merkle hashes of an n-record commit.
+
+Sharded commits: a block may commit S per-shard record batches at once
+(``ShardedCommit``). Shard boundaries produced by ``plan_shard_bounds``
+are *subtree-aligned* — every shard but the last covers exactly 2^m chunk
+leaves — so the cross-shard super-root (shard subtree roots combined
+pairwise bottom-up with the same interior-node rule) is bit-identical to
+the flat tree over the concatenated records, for every shard count.
+Sharding is therefore a node-local execution detail (subtrees build in
+parallel on a settler pool) rather than a consensus-visible change: S=1,
+S=4 and the unsharded commit all seal byte-identical blocks, and a
+record's ``merkle_proof`` — its chunk path inside the shard followed by
+the shard path to the super-root — is the same ``(side, digest)`` list
+the flat tree emits, verified by the unchanged ``MerkleTree.verify``.
+``verify_chain(deep=True)`` recurses through shards, rebuilding every
+subtree and the super-root from the stored batches.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import time
+from bisect import bisect_right
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -58,11 +74,13 @@ class RecordBatch(Sequence):
     numpy buffer; wrapping it (instead of slicing W small ``bytes`` objects
     up front) keeps the commit zero-copy — chunk leaves are direct buffer
     slices and per-record access materializes only the record asked for.
+    ``buf`` may be any bytes-like object (a ``memoryview`` straight onto
+    the numpy array's memory avoids even the one up-front copy).
     """
 
     __slots__ = ("buf", "itemsize")
 
-    def __init__(self, buf: bytes, itemsize: int) -> None:
+    def __init__(self, buf, itemsize: int) -> None:
         if itemsize <= 0 or len(buf) % itemsize:
             raise ValueError("buffer is not a whole number of records")
         self.buf = buf
@@ -94,6 +112,42 @@ def _chunk_bytes(records: Records, start: int, stop: int) -> bytes:
     return b"".join(records[start:stop])
 
 
+def _leaf_digest(chunk) -> bytes:
+    """Domain-separated leaf hash. Two ``update`` calls instead of one
+    ``_LEAF_PREFIX + chunk`` concatenation: the chunk may be a zero-copy
+    ``memoryview`` onto the record buffer (bytes + memoryview would
+    TypeError, and the concat would copy the leaf)."""
+    h = hashlib.sha256(_LEAF_PREFIX)
+    h.update(chunk)
+    return h.digest()
+
+
+def _combine(level: List[bytes]) -> Tuple[List[bytes], int]:
+    """One level of pairwise interior hashing; the odd node is promoted
+    unpaired. Returns (next level, interior hashes performed). Shared by
+    the in-shard tree and the cross-shard super-root so there is exactly
+    one hashing rule."""
+    nxt = [hashlib.sha256(_NODE_PREFIX + level[i] + level[i + 1]).digest()
+           for i in range(0, len(level) - 1, 2)]
+    ops = len(nxt)
+    if len(level) % 2:
+        nxt.append(level[-1])
+    return nxt, ops
+
+
+def _path_through(levels: Sequence[List[bytes]],
+                  index: int) -> List[Tuple[str, str]]:
+    """Sibling path for ``index`` through pairwise-combined ``levels``
+    (all levels below the root)."""
+    path: List[Tuple[str, str]] = []
+    for level in levels:
+        sib = index ^ 1
+        if sib < len(level):
+            path.append(("L" if sib < index else "R", level[sib].hex()))
+        index //= 2
+    return path
+
+
 class MerkleTree:
     """Binary Merkle tree over records, ``chunk_size`` records per leaf.
 
@@ -113,19 +167,12 @@ class MerkleTree:
         n = len(records)
         self.num_records = n
         self.chunk_size = chunk_size
-        level = [hashlib.sha256(
-            _LEAF_PREFIX + _chunk_bytes(records, i, min(i + chunk_size, n))
-        ).digest() for i in range(0, n, chunk_size)]
+        level = [_leaf_digest(_chunk_bytes(records, i, min(i + chunk_size, n)))
+                 for i in range(0, n, chunk_size)]
         self.levels: List[List[bytes]] = [level]
         while len(level) > 1:
-            nxt = []
-            for i in range(0, len(level) - 1, 2):
-                nxt.append(hashlib.sha256(
-                    _NODE_PREFIX + level[i] + level[i + 1]).digest())
-            if len(level) % 2:
-                nxt.append(level[-1])            # promote unpaired node
-            self.levels.append(nxt)
-            level = nxt
+            level, _ = _combine(level)
+            self.levels.append(level)
         # cost model: one hash per leaf + one per interior node
         self.hash_ops = sum(len(lv) for lv in self.levels[:-1]) + 1 \
             if len(self.levels) > 1 else 1
@@ -142,13 +189,7 @@ class MerkleTree:
         """Node path for leaf (= chunk) ``index``."""
         if not 0 <= index < self.num_leaves:
             raise IndexError(f"leaf index {index} out of range")
-        path: List[Tuple[str, str]] = []
-        for level in self.levels[:-1]:
-            sib = index ^ 1
-            if sib < len(level):
-                path.append(("L" if sib < index else "R", level[sib].hex()))
-            index //= 2
-        return path
+        return _path_through(self.levels[:-1], index)
 
     def record_proof(self, record_index: int) -> List[Tuple[str, str]]:
         """Node path for the chunk containing record ``record_index``."""
@@ -159,14 +200,150 @@ class MerkleTree:
     @staticmethod
     def verify(leaf: bytes, proof: Sequence[Tuple[str, str]],
                root: str) -> bool:
-        """``leaf`` is the full leaf byte-string — for a chunked tree, the
-        concatenation of the chunk's records."""
-        h = hashlib.sha256(_LEAF_PREFIX + leaf).digest()
+        """``leaf`` is the full leaf byte-string (any bytes-like object) —
+        for a chunked tree, the concatenation of the chunk's records."""
+        h = _leaf_digest(leaf)
         for side, sib_hex in proof:
             sib = bytes.fromhex(sib_hex)
             pair = sib + h if side == "L" else h + sib
             h = hashlib.sha256(_NODE_PREFIX + pair).digest()
         return h.hex() == root
+
+
+# -- sharded (two-level) commits ----------------------------------------------
+
+
+def plan_shard_bounds(num_records: int, chunk_size: int,
+                      shards: int) -> List[int]:
+    """Record-index boundaries splitting ``num_records`` into at most
+    ``shards`` contiguous ranges whose edges land on whole subtrees: every
+    shard but the last covers exactly 2^m chunk leaves (the last takes the
+    remainder), with m the smallest exponent giving ≤ ``shards`` ranges.
+    This alignment is what makes the per-shard subtree roots combine to
+    exactly the flat tree's root (see ``ShardedCommit``)."""
+    if num_records < 0 or chunk_size < 1 or shards < 1:
+        raise ValueError("need num_records >= 0, chunk_size/shards >= 1")
+    if num_records == 0:
+        return [0]
+    leaves = -(-num_records // chunk_size)
+    shards = min(shards, leaves)
+    m = 0
+    while (1 << m) * shards < leaves:      # smallest m: ceil(L/2^m) <= shards
+        m += 1
+    step = (1 << m) * chunk_size
+    return list(range(0, num_records, step)) + [num_records]
+
+
+class ShardedCommit(Sequence):
+    """Two-level Merkle commitment over per-shard record batches.
+
+    Level one: each shard's records get their own chunked subtree (built
+    independently — in parallel on a settler pool when one is supplied).
+    Level two: the shard subtree roots combine pairwise bottom-up with the
+    same interior-node rule into the cross-shard *super-root*, which is
+    what the block commits to. With subtree-aligned shard boundaries
+    (``plan_shard_bounds``) the super-root and every record's proof are
+    bit-identical to the flat single-tree commit, so shard count never
+    changes block hashes — only who hashes which records.
+
+    Indexing is over the concatenated record sequence, so the ledger's
+    per-record audit surface is shard-agnostic.
+    """
+
+    __slots__ = ("shards", "trees", "chunk_size", "bounds", "super_levels",
+                 "hash_ops")
+
+    def __init__(self, shards: Sequence[Records], chunk_size: int = 1,
+                 trees: Optional[Sequence[MerkleTree]] = None) -> None:
+        if not shards or any(not len(s) for s in shards):
+            raise ValueError("ShardedCommit needs non-empty shards")
+        self.shards: List[Records] = list(shards)
+        self.chunk_size = chunk_size
+        if trees is None:
+            trees = [MerkleTree(s, chunk_size) for s in self.shards]
+        self.trees: List[MerkleTree] = list(trees)
+        if len(self.trees) != len(self.shards):
+            raise ValueError("one precomputed tree per shard required")
+        bounds = [0]
+        for s in self.shards:
+            bounds.append(bounds[-1] + len(s))
+        self.bounds = bounds
+        level = [t.levels[-1][0] for t in self.trees]   # shard root digests
+        self.super_levels: List[List[bytes]] = [level]
+        super_ops = 0
+        while len(level) > 1:
+            level, ops = _combine(level)
+            super_ops += ops
+            self.super_levels.append(level)
+        self.hash_ops = sum(t.hash_ops for t in self.trees) + super_ops
+
+    # -- concatenated-record view --------------------------------------------
+
+    def __len__(self) -> int:
+        return self.bounds[-1]
+
+    def _locate(self, record_index: int) -> Tuple[int, int]:
+        if not 0 <= record_index < len(self):
+            raise IndexError(f"record index {record_index} out of range")
+        s = bisect_right(self.bounds, record_index) - 1
+        return s, record_index - self.bounds[s]
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        if i < 0:
+            i += len(self)
+        s, local = self._locate(i)
+        return self.shards[s][local]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def root(self) -> str:
+        return self.super_levels[-1][0].hex()
+
+    def shard_roots(self) -> List[str]:
+        return [t.root for t in self.trees]
+
+    # -- two-level proofs -----------------------------------------------------
+
+    def shard_path(self, shard_index: int) -> List[Tuple[str, str]]:
+        """Sibling path from shard ``shard_index``'s subtree root to the
+        super-root — the cross-shard half of a settlement proof."""
+        if not 0 <= shard_index < self.num_shards:
+            raise IndexError(f"shard index {shard_index} out of range")
+        return _path_through(self.super_levels[:-1], shard_index)
+
+    def record_proof(self, record_index: int) -> List[Tuple[str, str]]:
+        """Chunk path inside the record's shard + the shard path to the
+        super-root. ``MerkleTree.verify`` consumes it unchanged (both
+        halves are the same ``(side, digest)`` encoding), and with aligned
+        shards the concatenation is byte-equal to the flat tree's proof."""
+        s, local = self._locate(record_index)
+        return self.trees[s].record_proof(local) + self.shard_path(s)
+
+    def record_chunk(self, record_index: int) -> Tuple[List[bytes], int]:
+        """The record's leaf chunk (within its shard) and its offset."""
+        s, local = self._locate(record_index)
+        k = self.chunk_size
+        start = (local // k) * k
+        stop = min(start + k, len(self.shards[s]))
+        return [bytes(self.shards[s][i]) for i in range(start, stop)], \
+            local - start
+
+    def tamper(self, record_index: int, leaf: bytes) -> None:
+        """Test hook: corrupt one stored record in place."""
+        s, local = self._locate(record_index)
+        if isinstance(self.shards[s], RecordBatch):
+            self.shards[s] = list(self.shards[s])
+        self.shards[s][local] = leaf
+
+    def recompute_root(self) -> str:
+        """Root rebuilt from the stored batches (deep verification —
+        recurses through every shard subtree and the super levels)."""
+        return ShardedCommit(self.shards, self.chunk_size).root
 
 
 @dataclass
@@ -196,10 +373,11 @@ class Ledger:
         genesis.hash = genesis.compute_hash()
         self.blocks: List[Block] = [genesis]
         self.work_units: int = 0          # hashing/verification operations done
-        # off-chain data availability: per-block batch records + their tree
-        self._record_batches: Dict[int, Records] = {}
+        # off-chain data availability: per-block sharded commit (batches +
+        # subtrees + super levels); single-shard commits additionally mirror
+        # their tree into _record_trees (the pre-sharding introspection API)
+        self._commits: Dict[int, ShardedCommit] = {}
         self._record_trees: Dict[int, MerkleTree] = {}
-        self._record_chunks: Dict[int, int] = {}
 
     @property
     def head(self) -> Block:
@@ -208,45 +386,59 @@ class Ledger:
     def append_block(self, transactions: List[dict],
                      timestamp: Optional[float] = None,
                      record_batch: Optional[Records] = None,
-                     chunk_size: int = 1) -> Block:
-        """Seal a block. ``record_batch`` (canonically-encoded per-worker
-        settlement records) is Merkle-committed into the block hash via
-        ``records_root`` with ``chunk_size`` records per leaf; the records
-        themselves stay off-chain but per-record auditable
-        (``merkle_proof`` / ``record_chunk``)."""
-        root = ""
-        tree = None
-        if record_batch is not None and len(record_batch):
-            tree = MerkleTree(record_batch, chunk_size)
-            root = tree.root
+                     chunk_size: int = 1,
+                     record_shards: Optional[Sequence[Records]] = None,
+                     shard_trees: Optional[Sequence[MerkleTree]] = None
+                     ) -> Block:
+        """Seal a block. Canonically-encoded per-worker settlement records
+        are Merkle-committed into the block hash via ``records_root`` with
+        ``chunk_size`` records per leaf; the records themselves stay
+        off-chain but per-record auditable (``merkle_proof`` /
+        ``record_chunk``). Pass either ``record_batch`` (one flat batch) or
+        ``record_shards`` (per-shard batches, optionally with their
+        ``shard_trees`` prebuilt in parallel by a settler pool) — with
+        subtree-aligned shards both commit the identical root."""
+        commit = None
+        if record_shards is not None:
+            if shard_trees is not None and \
+                    len(shard_trees) != len(record_shards):
+                raise ValueError("one precomputed tree per shard required")
+            # drop empty shards and their trees in lockstep so the
+            # shard↔tree pairing survives the filter
+            keep = [i for i, s in enumerate(record_shards) if len(s)]
+            if keep:
+                commit = ShardedCommit(
+                    [record_shards[i] for i in keep], chunk_size,
+                    trees=None if shard_trees is None
+                    else [shard_trees[i] for i in keep])
+        elif record_batch is not None and len(record_batch):
+            commit = ShardedCommit([record_batch], chunk_size)
         blk = Block(len(self.blocks), self.head.hash, list(transactions),
                     time.monotonic() if timestamp is None else timestamp,
-                    records_root=root)
+                    records_root=commit.root if commit is not None else "")
         blk.hash = blk.compute_hash()
         # verification pass every append (each node re-hashes the new block);
         # batched commits add their ~2·ceil(n/k)−1 Merkle hashes
         self.work_units += 1 + len(transactions)
-        if tree is not None:
-            self.work_units += tree.hash_ops
-            self._record_batches[blk.index] = (
-                record_batch if isinstance(record_batch, RecordBatch)
-                else list(record_batch))
-            self._record_trees[blk.index] = tree
-            self._record_chunks[blk.index] = chunk_size
+        if commit is not None:
+            self.work_units += commit.hash_ops
+            self._commits[blk.index] = commit
+            if commit.num_shards == 1:
+                self._record_trees[blk.index] = commit.trees[0]
         self.blocks.append(blk)
         return blk
 
     def verify_chain(self, deep: bool = False) -> bool:
-        """Hash-chain integrity; ``deep=True`` additionally recomputes every
-        stored record batch's Merkle root against its block commitment."""
+        """Hash-chain integrity; ``deep=True`` additionally recurses through
+        every stored commit — rebuilding each shard subtree and the
+        cross-shard super-root — against its block commitment."""
         prev = self.GENESIS_HASH
         for blk in self.blocks:
             if blk.prev_hash != prev or blk.hash != blk.compute_hash():
                 return False
-            if deep and blk.index in self._record_batches:
-                if (MerkleTree(self._record_batches[blk.index],
-                               self._record_chunks[blk.index]).root
-                        != blk.records_root):
+            if deep and blk.index in self._commits:
+                if self._commits[blk.index].recompute_root() \
+                        != blk.records_root:
                     return False
             prev = blk.hash
         return True
@@ -254,28 +446,35 @@ class Ledger:
     # -- per-record audit -----------------------------------------------------
 
     def record_batch(self, block_index: int) -> Records:
-        return self._record_batches[block_index]
+        """The block's committed records as one concatenated sequence
+        (shard-agnostic view; single-shard commits return the batch)."""
+        commit = self._commits[block_index]
+        return commit.shards[0] if commit.num_shards == 1 else commit
 
     def record_chunk_size(self, block_index: int) -> int:
-        return self._record_chunks[block_index]
+        return self._commits[block_index].chunk_size
+
+    def num_shards(self, block_index: int) -> int:
+        return self._commits[block_index].num_shards
+
+    def shard_roots(self, block_index: int) -> List[str]:
+        """Per-shard subtree roots under the block's super-root."""
+        return self._commits[block_index].shard_roots()
 
     def merkle_proof(self, block_index: int,
                      record_index: int) -> List[Tuple[str, str]]:
-        """O(log(n/k)) node path for the chunk holding one settlement record
-        of a batched block — auditing worker w never rehashes the round."""
-        return self._record_trees[block_index].record_proof(record_index)
+        """O(log(n/k)) two-level node path — the chunk path inside the
+        record's shard plus the shard path to the super-root — for one
+        settlement record of a batched block; auditing worker w never
+        rehashes the round."""
+        return self._commits[block_index].record_proof(record_index)
 
     def record_chunk(self, block_index: int,
                      record_index: int) -> Tuple[List[bytes], int]:
         """The chunk of records whose leaf commits ``record_index``, plus
         the record's offset within it — what an auditor ships alongside the
         node path so a verifier can recompute the leaf."""
-        records = self._record_batches[block_index]
-        k = self._record_chunks[block_index]
-        start = (record_index // k) * k
-        stop = min(start + k, len(records))
-        return [bytes(records[i]) for i in range(start, stop)], \
-            record_index - start
+        return self._commits[block_index].record_chunk(record_index)
 
     def verify_record(self, block_index: int, record_index: int,
                       leaf: Optional[bytes] = None,
@@ -298,10 +497,7 @@ class Ledger:
     def tamper_record(self, block_index: int, record_index: int,
                       leaf: bytes) -> None:
         """Test hook: corrupt an off-chain settlement record in place."""
-        batch = self._record_batches[block_index]
-        if isinstance(batch, RecordBatch):     # materialize to a mutable list
-            batch = self._record_batches[block_index] = list(batch)
-        batch[record_index] = leaf
+        self._commits[block_index].tamper(record_index, leaf)
 
     @staticmethod
     def randomness_from(head_hash: str, round_index: int) -> int:

@@ -94,6 +94,13 @@ def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES,
     return deco
 
 
+# profile API parity (HYPOTHESIS_PROFILE=ci in CI): the fallback is always
+# deterministic — examples derive from the test's qualified name — so
+# profiles are accepted and ignored
+settings.register_profile = lambda name, **kw: None
+settings.load_profile = lambda name: None
+
+
 def given(**strategies: _Strategy) -> Callable:
     def deco(fn: Callable) -> Callable:
         seed = int.from_bytes(
@@ -119,7 +126,7 @@ def given(**strategies: _Strategy) -> Callable:
                     shown = {k: v for k, v in kwargs.items()
                              if not isinstance(v, _DataObject)}
                     raise AssertionError(
-                        f"falsifying example (hypothesis fallback): "
+                        "falsifying example (hypothesis fallback): "
                         f"{fn.__qualname__}({shown!r})") from exc
                 ran += 1
 

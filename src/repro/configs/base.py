@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -171,6 +171,20 @@ class FederationConfig:
     pipeline_depth: int = 2                 # pending rounds the background
                                             # settler may hold (0 = settle
                                             # inline on the training thread)
+    settlement_shards: int = 1              # contract shards per round: slices
+                                            # settle + hash their own Merkle
+                                            # subtree in parallel under one
+                                            # cross-shard super-root (subtree-
+                                            # aligned, so block hashes are
+                                            # shard-count independent)
+    settler_pool_size: int = 0              # shard-worker threads draining the
+                                            # per-shard queues (0 = auto:
+                                            # min(settlement_shards, cpus),
+                                            # spawned only when the leaf-size
+                                            # gate could feed them; an explicit
+                                            # size forces the spawn; effective
+                                            # only with pipeline_depth > 0 and
+                                            # shards > 1)
 
 
 @dataclass(frozen=True)

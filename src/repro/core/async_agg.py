@@ -47,10 +47,13 @@ def async_round(updates, scores, mask, state: AsyncState,
     w = w / jnp.maximum(jnp.sum(w), 1e-12)
     agg = hierarchy.aggregate(total, w, fed)
 
-    # arrived workers flush their buffer & reset staleness
-    def flush(p, t):
-        m = maskf.reshape((-1,) + (1,) * (t.ndim - 1))
-        return t * (1.0 - m)
-    new_pending = jax.tree.map(flush, state.pending, total)
+    # arrived workers flush their buffer & reset staleness. The keep-mask
+    # (1 − arrivals) is computed once per round and only *broadcast* per
+    # leaf — an arrived worker's pending is zeroed exactly, so re-running
+    # the flush (or the next round) can never aggregate the same buffered
+    # update twice (see the double-count regression test).
+    keep = 1.0 - maskf
+    new_pending = jax.tree.map(
+        lambda t: t * keep.reshape((-1,) + (1,) * (t.ndim - 1)), total)
     new_staleness = jnp.where(mask > 0, 0, state.staleness + 1)
     return agg, AsyncState(new_staleness, new_pending), w

@@ -23,8 +23,7 @@ publication, head rotation bookkeeping) happens *between* jitted rounds in
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,12 +7,18 @@ from on-chain randomness, and optional asynchronous arrivals.
 Threaded multi-round pipeline: ``run_round`` dispatches round r's jitted
 ``_round_fn`` and hands round r−1's host-side chain work (contract
 settlement, chunked Merkle commitment, IPFS publication) to a background
-*settler* — a single worker thread draining a bounded queue of pending
-rounds (``fed.pipeline_depth``; 0 settles inline, reproducing the serial
-driver). Chain work therefore never occupies the training thread: the
-training-path ``chain_time`` is the queue handoff only, and multiple
-rounds can be in flight (round r computing on device while the settler
-works the backlog) instead of settlement trailing by exactly one round.
+*settler pool* (``_SettlerPool``) — a coordinator thread draining a
+bounded queue of pending rounds (``fed.pipeline_depth``; 0 settles inline,
+reproducing the serial driver) that fans each round's per-shard contract
+slices (``fed.settlement_shards``) out to N shard-worker threads
+(``ShardWorkerPool``, sized by ``fed.settler_pool_size``) over per-shard
+queues, and seals the block over the cross-shard super-root only at the
+merge barrier, after every shard succeeded. Chain work therefore never
+occupies the training thread — the training-path ``chain_time`` is the
+queue handoff only, multiple rounds can be in flight, and within a round
+the shard subtrees hash in parallel. Shard boundaries are Merkle-subtree
+aligned, so shard count never changes block hashes: S=1, S=8 and the
+serial driver produce byte-identical chains (property-tested).
 
 Decision sequences are byte-identical to the serial driver: the settler
 publishes each settled round's chain head, and round r's head rotation
@@ -42,6 +48,7 @@ the same jitted round is what the production launcher shards over pods.
 """
 from __future__ import annotations
 
+import os
 import queue
 import threading
 import time
@@ -92,10 +99,97 @@ class _PendingRound:
     scores: np.ndarray
 
 
-class _ChainSettler:
-    """Background chain worker: one daemon thread consuming a bounded queue
-    of pending rounds, settling each in submission order and publishing the
-    resulting chain head per round.
+class ShardWorkerPool:
+    """N shard-worker threads, each draining its own task queue.
+
+    ``map`` fans one round's shard thunks out — shard i always lands on
+    queue i mod N, so a given contract shard runs on the same worker and
+    its work stays FIFO across rounds — and blocks at the merge barrier
+    until every thunk finished, then re-raises the lowest-shard-index
+    failure (deterministic, whichever thread hit it first). Thunks must be
+    pure compute (the contract's ``settle_shard`` mutates nothing), so
+    after a failure the survivors' results are simply dropped.
+
+    Workers hold only a weak reference to the pool and wake periodically
+    while idle, so an abandoned (never-finalized) protocol's shard threads
+    exit instead of living for the rest of the process."""
+
+    _IDLE_POLL_S = 2.0
+
+    def __init__(self, num_threads: int) -> None:
+        self.num_threads = max(1, int(num_threads))
+        self._queues: List["queue.Queue"] = [queue.Queue()
+                                             for _ in range(self.num_threads)]
+        self._stopped = False
+        ref = weakref.ref(self)
+        self._threads = [
+            threading.Thread(target=self._work, args=(q, ref), daemon=True,
+                             name=f"sdflb-shard-worker-{i}")
+            for i, q in enumerate(self._queues)]
+        for t in self._threads:
+            t.start()
+
+    @staticmethod
+    def _work(q: "queue.Queue", pool_ref: "weakref.ref") -> None:
+        while True:
+            try:
+                item = q.get(timeout=ShardWorkerPool._IDLE_POLL_S)
+            except queue.Empty:
+                if pool_ref() is None:         # owner got collected
+                    return
+                continue
+            if item is None:                   # stop sentinel
+                return
+            fn, i, out, cv, remaining = item
+            try:
+                out[i] = ("ok", fn())
+            except BaseException as e:
+                out[i] = ("err", e)
+            finally:
+                del fn, item                   # don't pin results while idle
+                with cv:
+                    remaining[0] -= 1
+                    cv.notify_all()
+
+    def map(self, thunks) -> list:
+        """Run ``thunks[i]`` on worker i mod N; return their results in
+        order, or raise the first (by index) failure after all finished."""
+        if self._stopped:
+            raise RuntimeError("shard pool already stopped")
+        thunks = list(thunks)
+        if not thunks:
+            return []
+        out: list = [None] * len(thunks)
+        cv = threading.Condition()
+        remaining = [len(thunks)]
+        for i, fn in enumerate(thunks):
+            self._queues[i % self.num_threads].put((fn, i, out, cv,
+                                                    remaining))
+        with cv:
+            cv.wait_for(lambda: remaining[0] == 0)
+        for tag, val in out:
+            if tag == "err":
+                raise val
+        return [val for _, val in out]
+
+    def stop(self) -> None:
+        """Terminate the workers (idempotent); outstanding queue items run
+        first since the sentinel sits behind them."""
+        if self._stopped:
+            return
+        self._stopped = True
+        for q in self._queues:
+            q.put(None)
+        for t in self._threads:
+            t.join()
+
+
+class _SettlerPool:
+    """Background settlement pool: a coordinator daemon thread consuming a
+    bounded queue of pending rounds, settling each in submission order —
+    fanning its contract shards out to the ``ShardWorkerPool`` and sealing
+    the block at the merge barrier — and publishing the resulting chain
+    head per round.
 
     The training thread interacts through three calls: ``submit`` (the
     queue handoff — blocks only when ``depth`` rounds are already in
@@ -103,22 +197,28 @@ class _ChainSettler:
     blocking until the settler has produced it — the *only* point the
     pipeline couples back to chain state, because round r+1's on-chain
     randomness needs round r's block hash), and ``flush`` (drain
-    everything submitted; idempotent). A settle exception is sticky: the
-    settler stops settling (queued rounds are drained and discarded so
-    nothing commits on top of a half-settled chain) and every subsequent
-    interaction re-raises on the training thread.
+    everything submitted; idempotent). A settle exception — including a
+    single shard failing at the fan-out, which aborts its round before
+    anything was applied or committed (shards mutate nothing; the merge
+    runs only after all of them succeed, so no half-settled super-root
+    ever reaches the chain) — is sticky: the coordinator stops settling
+    (queued rounds are drained and discarded so nothing commits on top of
+    a half-settled chain) and every subsequent interaction re-raises on
+    the training thread.
 
     The protocol is held through a weak reference and the worker wakes
     periodically while idle, so an abandoned (never-finalized) protocol is
-    still garbage-collectable and its settler thread exits instead of
+    still garbage-collectable and its settler threads exit instead of
     pinning params/ledger for the life of the process."""
 
     _IDLE_POLL_S = 2.0
 
     def __init__(self, settle_fn: Callable[["_PendingRound"], Optional[str]],
-                 depth: int, initial_head: Optional[str]) -> None:
+                 depth: int, initial_head: Optional[str],
+                 shard_pool: Optional[ShardWorkerPool] = None) -> None:
         # weak: the thread must not keep the owning protocol alive
         self._settle = weakref.WeakMethod(settle_fn)
+        self.shard_pool = shard_pool
         self._q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
         self._cv = threading.Condition()
         self._submitted = -1
@@ -127,7 +227,7 @@ class _ChainSettler:
         self._error: Optional[BaseException] = None
         self._stopped = False
         self._thread = threading.Thread(target=self._loop, daemon=True,
-                                        name="sdflb-chain-settler")
+                                        name="sdflb-settler-coordinator")
         self._thread.start()
 
     # -- worker side ---------------------------------------------------------
@@ -212,12 +312,15 @@ class _ChainSettler:
             self._check_error()
 
     def stop(self) -> None:
-        """Flush, then terminate the worker thread (idempotent)."""
+        """Flush, then terminate the coordinator and shard workers
+        (idempotent)."""
         self.flush()
         if not self._stopped:
             self._stopped = True
             self._q.put(None)
             self._thread.join()
+            if self.shard_pool is not None:
+                self.shard_pool.stop()
 
 
 class SDFLBProtocol:
@@ -263,7 +366,8 @@ class SDFLBProtocol:
                 self.ledger, requester_deposit=fed.requester_deposit,
                 worker_stake=fed.worker_stake, penalty_pct=fed.penalty_pct,
                 trust_threshold=fed.trust_threshold, top_k=fed.top_k_rewarded,
-                merkle_chunk_size=fed.merkle_chunk_size)
+                merkle_chunk_size=fed.merkle_chunk_size,
+                settlement_shards=fed.settlement_shards)
             self.contract.join_batch(self.W)   # integer ids, one batch tx
         self.history: List[RoundRecord] = []
         self.heads = [0] * fed.num_clusters
@@ -276,13 +380,27 @@ class SDFLBProtocol:
                                          fed.num_clusters)
                          if use_blockchain else None)
         self._pending: Optional[_PendingRound] = None
-        # depth > 0: chain work runs on the settler thread; 0: inline (the
-        # serial reference driver the equivalence property test pins)
-        self._settler: Optional[_ChainSettler] = None
+        # depth > 0: chain work runs on the settler pool; 0: inline (the
+        # serial reference driver the equivalence property test pins).
+        # Shard workers spawn only when settlement is sharded, threaded,
+        # and the contract's leaf-size gate could ever feed them (an
+        # explicit settler_pool_size forces the spawn) — the shard
+        # *partition* (and hence every block hash) is identical either
+        # way, the pool only changes who hashes it.
+        self._settler: Optional[_SettlerPool] = None
+        self._shard_pool: Optional[ShardWorkerPool] = None
         if fed.pipeline_depth > 0:
-            self._settler = _ChainSettler(
+            pool_size = fed.settler_pool_size or \
+                min(fed.settlement_shards, os.cpu_count() or 1)
+            if use_blockchain and fed.settlement_shards > 1 \
+                    and pool_size > 1 \
+                    and (fed.settler_pool_size > 0
+                         or self.contract.parallel_fanout_possible()):
+                self._shard_pool = ShardWorkerPool(pool_size)
+            self._settler = _SettlerPool(
                 self._settle_one, fed.pipeline_depth,
-                self.ledger.head.hash if self.ledger is not None else None)
+                self.ledger.head.hash if self.ledger is not None else None,
+                shard_pool=self._shard_pool)
 
     # -- head rotation from on-chain randomness ------------------------------
 
@@ -328,13 +446,22 @@ class SDFLBProtocol:
                 self.exchange.register(ridx, c, cid)
             self.contract.pending.extend(self.exchange.round_transactions(ridx))
             # logical timestamp: every node (and the serial reference
-            # driver) seals byte-identical blocks for the same round
+            # driver) seals byte-identical blocks for the same round; shard
+            # slices fan out to the worker pool when one exists
             pen = self.contract.settle_round_batch(
-                ridx, p.scores, model_cid=cid, timestamp=float(ridx + 1))
+                ridx, p.scores, model_cid=cid, timestamp=float(ridx + 1),
+                pool=self._shard_pool)
             p.record.model_cid = cid
             p.record.penalties = pen
-            assert self.ledger.verify_chain()
-            head = self.ledger.head.hash
+            # O(1) integrity check of the block just sealed (linkage +
+            # recomputed hash) — a full verify_chain here would rehash
+            # every prior block each round, O(R^2) over a run
+            blk = self.ledger.head
+            if (blk.prev_hash != self.ledger.blocks[blk.index - 1].hash
+                    or blk.hash != blk.compute_hash()):
+                raise RuntimeError(
+                    f"round {ridx}: sealed block failed verification")
+            head = blk.hash
             bad = p.scores < self.contract.T
         else:
             bad = np.zeros(self.W, bool)
@@ -447,8 +574,9 @@ class SDFLBProtocol:
     def finalize(self) -> Dict[str, float]:
         self.flush()               # drain every in-flight pipelined round
         if self._settler is not None:
-            self._settler.stop()
+            self._settler.stop()   # stops the shard workers too
             self._settler = None
+            self._shard_pool = None
         if self.contract is not None:
             return self.contract.finalize(
                 timestamp=float(len(self.history) + 1))

@@ -11,7 +11,7 @@ rotation stochastic (on-chain randomness) so no worker dominates (paper
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

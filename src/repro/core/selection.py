@@ -6,7 +6,6 @@ Selects the per-round participation mask consumed by ``fl_step``/
 ``async_agg``. All strategies are deterministic given (seed, round)."""
 from __future__ import annotations
 
-from typing import Optional
 
 import numpy as np
 

@@ -16,7 +16,7 @@ pattern generators) for the assigned-architecture smoke/e2e runs.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -25,7 +25,6 @@ LANE = 128
 def _kernel(upd_ref, dot_ref, squ_ref, sqc_ref):
     i = pl.program_id(0)
     u = upd_ref[...].astype(jnp.float32)          # (W, BD)
-    W = u.shape[0]
     c = jnp.mean(u, axis=0, keepdims=True)        # (1, BD) consensus tile
 
     dot_tile = jnp.sum(u * c, axis=1)[None, :]    # (1, W)

@@ -4,14 +4,12 @@ what the dry-run lowers. No device allocation anywhere (eval_shape only).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (FederationConfig, ModelConfig, ShapeConfig,
+from repro.configs.base import (FederationConfig, ModelConfig,
                                 TrainConfig)
 from repro.configs.registry import get_config, get_shape
 from repro.core import fl_step
@@ -219,8 +217,8 @@ def prefill_setup(arch: str, shape_name: str, mesh):
         with activation_sharding(act):
             return api.prefill(params, cfg, batch, sh.seq_len)
 
-    vspec = None  # logits replicated over model unless vocab sharded
-    logits_spec = P(dp, None, None)
+    logits_spec = P(dp, None, None)   # logits replicated over model
+                                      # unless vocab sharded
     in_shardings = (_named(mesh, param_specs), _named(mesh, batch_specs))
     out_shardings = (NamedSharding(mesh, logits_spec),
                      _named(mesh, cache_specs))

@@ -15,7 +15,6 @@ the 34B config. Sequence-sharding the carry makes the saved activations
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
 
 import jax
 

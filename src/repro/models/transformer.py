@@ -7,8 +7,6 @@ activation-remat policy for training shapes.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

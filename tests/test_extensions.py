@@ -1,6 +1,5 @@
 """Gossip exchange, reputation book, and client-selection strategies."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st

@@ -1,15 +1,13 @@
 """Model-component correctness: blocked attention vs direct softmax, SSD
 chunked scan vs naive recurrence, MoE gather vs dense oracle, sliding
 window masks, RoPE properties."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.configs.base import MoEConfig, SSMConfig
+from repro.configs.base import MoEConfig
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as S

@@ -1,0 +1,324 @@
+"""Sharded multi-contract settlement: subtree-aligned shard planning,
+cross-shard super-root commits (byte-identical to the flat commit for every
+shard count), two-level settlement proofs with tamper detection at both the
+shard and chunk level, the ShardWorkerPool, and the settler-pool protocol
+driver (byte-identical chains vs the serial reference, sticky shard
+failures that never commit a half-settled super-root)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.chain.contract import TrustContract
+from repro.chain.ledger import (Ledger, MerkleTree, ShardedCommit,
+                                plan_shard_bounds)
+from repro.core.protocol import SDFLBProtocol, ShardWorkerPool
+
+
+def _records(n, seed=0, size=40):
+    rng = np.random.default_rng(seed)
+    return [bytes(rng.bytes(size)) for _ in range(n)]
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 400), k=st.integers(1, 9), shards=st.integers(1, 9))
+def test_plan_shard_bounds_covers_and_aligns(n, k, shards):
+    """Property: bounds cover [0, n] contiguously, yield at most ``shards``
+    ranges, and every shard but the last spans exactly 2^m chunk leaves (the
+    alignment that makes the super-root equal the flat root)."""
+    bounds = plan_shard_bounds(n, k, shards)
+    assert bounds[0] == 0 and bounds[-1] == n
+    assert all(a < b for a, b in zip(bounds, bounds[1:]))
+    assert len(bounds) - 1 <= shards
+    widths = [b - a for a, b in zip(bounds, bounds[1:])]
+    if len(widths) > 1:
+        g = widths[0]
+        leaves = g // k
+        assert g % k == 0 and leaves & (leaves - 1) == 0   # 2^m whole leaves
+        assert all(w == g for w in widths[:-1]) and widths[-1] <= g
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 200), k=st.integers(1, 8), shards=st.integers(1, 8),
+       seed=st.integers(0, 1000))
+def test_super_root_and_proofs_match_flat_commit(n, k, shards, seed):
+    """Property: for any (n, chunk_size, shard count), the sharded commit's
+    super-root AND every record's two-level proof are byte-identical to the
+    flat single-tree commit — shard count is not consensus-visible."""
+    recs = _records(n, seed)
+    flat = MerkleTree(recs, k)
+    bounds = plan_shard_bounds(n, k, shards)
+    commit = ShardedCommit([recs[a:b] for a, b in zip(bounds, bounds[1:])], k)
+    assert commit.root == flat.root
+    rng = np.random.default_rng(seed)
+    for ri in set(int(rng.integers(0, n)) for _ in range(5)) | {0, n - 1}:
+        assert commit.record_proof(ri) == flat.record_proof(ri)
+        chunk, off = commit.record_chunk(ri)
+        assert chunk[off] == recs[ri]
+        assert MerkleTree.verify(b"".join(chunk), commit.record_proof(ri),
+                                 commit.root)
+
+
+def _settled_contract(S, rounds=4, W=50, chunk=3, seed=1):
+    led = Ledger()
+    c = TrustContract(led, requester_deposit=1e4, worker_stake=10.0,
+                      penalty_pct=50.0, trust_threshold=0.5, top_k=5,
+                      merkle_chunk_size=chunk, settlement_shards=S)
+    c.join_batch(W)
+    scores = np.random.default_rng(seed).random((rounds, W))
+    for r in range(rounds):
+        c.settle_round_batch(r, scores[r], timestamp=float(r + 1))
+    return led, c
+
+
+@pytest.mark.parametrize("S", [2, 7])
+def test_sharded_chains_byte_identical_to_serial(S):
+    """S ∈ {1, 2, 7} contracts seal byte-identical chains (block hashes,
+    roots, payouts) on the same score stream — the sharded settlement is
+    bit-equal to the unsharded PR-2 reference."""
+    led1, c1 = _settled_contract(1)
+    ledS, cS = _settled_contract(S)
+    pay1, payS = c1.finalize(timestamp=9.0), cS.finalize(timestamp=9.0)
+    assert [b.hash for b in led1.blocks] == [b.hash for b in ledS.blocks]
+    assert pay1 == payS
+    np.testing.assert_array_equal(c1.stake, cS.stake)
+    assert c1.requester_balance == cS.requester_balance
+    assert ledS.verify_chain(deep=True)
+    # the sharded ledger really did commit through multiple subtrees
+    assert ledS.num_shards(ledS.blocks[1].index) > 1
+    assert led1.num_shards(led1.blocks[1].index) == 1
+
+
+def test_two_level_proofs_roundtrip_and_tamper_detection():
+    """Two-level settlement proofs verify for every worker; tampering is
+    caught at both levels — a corrupted record (chunk level) and a forged
+    shard sibling digest (shard level) both fail verification, and deep
+    chain verification recurses into the bad subtree."""
+    led, c = _settled_contract(4, rounds=2, W=60, chunk=4)
+    blk_index = c._round_blocks[1]
+    n_shards = led.num_shards(blk_index)
+    assert n_shards > 1
+    shard_path_len = (n_shards - 1).bit_length()     # levels above the shards
+    for w in (0, 17, 31, 59):
+        proof = c.settlement_proof(1, w)
+        assert c.verify_settlement(proof)
+        # the proof's tail is the cross-shard path to the super-root
+        assert len(proof["proof"]) >= shard_path_len
+        # chunk-level forgery: swap in a different (authentic-format) leaf
+        assert not c.verify_settlement(dict(proof, leaf=b"\x01" * 40))
+        # shard-level forgery: corrupt the shard-path sibling digest
+        doctored = list(proof["proof"])
+        side, digest = doctored[-1]
+        doctored[-1] = (side, "00" * 32)
+        assert not c.verify_settlement(dict(proof, proof=doctored))
+        # malformed attacker-supplied proofs are rejected, never raised on:
+        # non-hex sibling digests, non-bytes chunk entries, missing keys
+        assert not c.verify_settlement(dict(proof, proof=[("L", "zz")]))
+        garbled = list(proof["chunk"])
+        garbled[(proof["offset"] + 1) % len(garbled)] = 12345
+        assert not c.verify_settlement(dict(proof, chunk=garbled))
+        assert not c.verify_settlement({})
+        assert not c.verify_settlement({"chunk": 5, "leaf": b"x"})
+        assert not c.verify_settlement(dict(proof, leaf=5, chunk=[5],
+                                            offset=0))
+    # tamper one stored record in a non-first shard: its proof and deep
+    # verification break, the shallow hash chain stays intact
+    bounds = c.shard_bounds(60)
+    victim = bounds[1] + 1                           # lives in shard 1
+    led.tamper_record(blk_index, victim, b"x" * 40)
+    assert led.verify_chain() and not led.verify_chain(deep=True)
+    assert not led.verify_record(blk_index, victim)
+    # shard roots are individually exposed for cross-shard audit
+    assert len(led.shard_roots(blk_index)) == n_shards
+
+
+def test_append_block_drops_empty_shards_in_lockstep_with_trees():
+    """Empty shards are filtered together with their precomputed trees (the
+    shard↔tree pairing survives), and a shard/tree length mismatch is
+    rejected up front."""
+    led = Ledger()
+    recs = _records(12)
+    shards = [recs[:8], [], recs[8:]]
+    trees = [MerkleTree(shards[0], 2), None, MerkleTree(shards[2], 2)]
+    blk = led.append_block([{"t": 1}], timestamp=1.0, record_shards=shards,
+                           shard_trees=trees, chunk_size=2)
+    assert led.num_shards(blk.index) == 2
+    assert led.verify_chain(deep=True)
+    assert blk.records_root == ShardedCommit([recs[:8], recs[8:]], 2).root
+    with pytest.raises(ValueError):
+        led.append_block([{"t": 2}], record_shards=shards,
+                         shard_trees=trees[:2], chunk_size=2)
+
+
+def test_shard_worker_pool_maps_in_order_and_raises_deterministically():
+    pool = ShardWorkerPool(3)
+    try:
+        assert pool.map([lambda i=i: i * i for i in range(10)]) == \
+            [i * i for i in range(10)]
+        assert pool.map([]) == []
+
+        def boom(i):
+            raise ValueError(f"shard {i} died")
+
+        # every thunk runs; the lowest-index failure is the one raised
+        with pytest.raises(ValueError, match="shard 2 died"):
+            pool.map([lambda: 0, lambda: 1, lambda: boom(2),
+                      lambda: boom(5)])
+        # the pool survives a failed map and keeps serving
+        assert pool.map([lambda: "ok"]) == ["ok"]
+    finally:
+        pool.stop()
+    with pytest.raises(RuntimeError):
+        pool.map([lambda: 1])
+    pool.stop()                                      # idempotent
+
+
+def test_pooled_settlement_bit_identical_to_inline():
+    """The worker pool only changes which thread hashes a shard — penalties,
+    state, and chains are bit-identical with and without it."""
+    pool = ShardWorkerPool(2)
+    try:
+        outs = {}
+        for use_pool in (False, True):
+            led = Ledger()
+            c = TrustContract(led, requester_deposit=1e3, worker_stake=10.0,
+                              penalty_pct=50.0, trust_threshold=0.5, top_k=3,
+                              merkle_chunk_size=2, settlement_shards=5)
+            c.min_parallel_leaf_bytes = 1     # force fan-out at tiny leaves
+            c.join_batch(40)
+            scores = np.random.default_rng(2).random((3, 40))
+            pens = [c.settle_round_batch(r, scores[r], timestamp=float(r + 1),
+                                         pool=pool if use_pool else None)
+                    for r in range(3)]
+            outs[use_pool] = (pens, [b.hash for b in led.blocks],
+                              c.stake.copy())
+        for a, b in zip(outs[False][0], outs[True][0]):
+            np.testing.assert_array_equal(a, b)
+        assert outs[False][1] == outs[True][1]
+        np.testing.assert_array_equal(outs[False][2], outs[True][2])
+    finally:
+        pool.stop()
+
+
+def test_pool_spawn_gated_on_fanout_feasibility():
+    """No dead threads: with auto pool sizing, shard workers spawn only
+    when the contract's leaf-size gate could ever feed them; an explicit
+    settler_pool_size forces the spawn (what the driver tests rely on)."""
+    import dataclasses as dc
+
+    from repro.configs.registry import get_config
+    from repro.configs.base import FederationConfig, TrainConfig
+
+    cfg = get_config("paper-net")
+    tc = TrainConfig(remat=False)
+    base = FederationConfig(num_clusters=1, workers_per_cluster=4,
+                            settlement_shards=4, pipeline_depth=2)
+    # default chunk (64 → 2.5 KiB leaves) < gate: auto sizing spawns nothing
+    p1 = SDFLBProtocol(cfg, base, tc, use_blockchain=True, seed=0)
+    assert p1._shard_pool is None
+    assert not p1.contract.parallel_fanout_possible()
+    # big leaves clear the gate: auto sizing spawns workers
+    p2 = SDFLBProtocol(cfg, dc.replace(base, merkle_chunk_size=1024), tc,
+                       use_blockchain=True, seed=0)
+    assert p2._shard_pool is not None
+    assert p2.contract.parallel_fanout_possible()
+    # explicit pool size forces the spawn even under the gate
+    p3 = SDFLBProtocol(cfg, dc.replace(base, settler_pool_size=2), tc,
+                       use_blockchain=True, seed=0)
+    assert p3._shard_pool is not None
+    for p in (p1, p2, p3):
+        p.finalize()
+
+
+# -- protocol-level: settler pool vs serial reference -------------------------
+
+
+def _decision_trace(proto):
+    return {
+        "blocks": [b.hash for b in proto.ledger.blocks],
+        "heads": [tuple(r.heads) for r in proto.history],
+        "penalties": np.stack([r.penalties for r in proto.history]),
+        "cids": [r.model_cid for r in proto.history],
+    }
+
+
+@pytest.mark.parametrize("shards", [2, 7])
+def test_settler_pool_driver_matches_serial(shards):
+    """Property: the sharded settler-pool driver (pipeline_depth > 0,
+    settlement_shards ∈ {2, 7}, 2 shard workers) produces byte-identical
+    chains, elections, penalties and payouts to the serial unsharded
+    reference (depth 0, S = 1) on the same data."""
+    from repro.configs.registry import get_config
+    from repro.data.datasets import make_federated_mnist
+    from repro.configs.base import FederationConfig, TrainConfig
+
+    cfg = get_config("paper-net")
+    tc = TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd", remat=False)
+    base = FederationConfig(num_clusters=2, workers_per_cluster=3,
+                            trust_threshold=0.45, top_k_rewarded=3,
+                            merkle_chunk_size=1)
+    runs = {}
+    for name, depth, S in (("serial", 0, 1), ("pooled", 3, shards)):
+        ds = make_federated_mnist(6, samples=768, seed=5)
+        fed = dataclasses.replace(base, pipeline_depth=depth,
+                                  settlement_shards=S, settler_pool_size=2)
+        proto = SDFLBProtocol(cfg, fed, tc, use_blockchain=True, seed=11)
+        if name == "pooled":
+            assert proto._shard_pool is not None     # workers really spawn
+            # tiny leaves would normally inhibit fan-out (GIL economics);
+            # force it so this test pins pool-thread determinism too
+            proto.contract.min_parallel_leaf_bytes = 1
+        for _ in range(6):
+            proto.run_round(ds.round_batches(32))
+        proto.flush()
+        payouts = proto.finalize()
+        assert proto.ledger.verify_chain(deep=True)
+        runs[name] = (_decision_trace(proto), payouts)
+    serial, pooled = runs["serial"], runs["pooled"]
+    assert serial[0]["blocks"] == pooled[0]["blocks"]    # byte-identical
+    assert serial[0]["heads"] == pooled[0]["heads"]
+    assert serial[0]["cids"] == pooled[0]["cids"]
+    np.testing.assert_array_equal(serial[0]["penalties"],
+                                  pooled[0]["penalties"])
+    assert serial[1] == pooled[1]                        # payouts
+
+
+def test_shard_failure_is_sticky_and_never_half_commits():
+    """One shard failing aborts its round with contract state and chain
+    untouched (no half-settled super-root), poisons the settler for later
+    rounds (sticky re-raise), and discards everything still queued."""
+    from repro.configs.registry import get_config
+    from repro.data.datasets import make_federated_mnist
+    from repro.configs.base import FederationConfig, TrainConfig
+
+    cfg = get_config("paper-net")
+    tc = TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd", remat=False)
+    fed = FederationConfig(num_clusters=1, workers_per_cluster=6,
+                           trust_threshold=0.2, merkle_chunk_size=1,
+                           settlement_shards=3, settler_pool_size=2,
+                           pipeline_depth=2)
+    ds = make_federated_mnist(6, samples=256, seed=0)
+    proto = SDFLBProtocol(cfg, fed, tc, use_blockchain=True, seed=0)
+    assert len(proto.contract.shard_bounds(6)) - 1 > 1   # really sharded
+
+    orig = proto.contract.settle_shard
+
+    def failing_shard(round_index, ids, s, start, stop):
+        if start > 0:                                    # shard 0 succeeds,
+            raise RuntimeError("shard worker died")      # a later shard dies
+        return orig(round_index, ids, s, start, stop)
+
+    proto.contract.settle_shard = failing_shard
+    stake_before = proto.contract.stake.copy()
+    with pytest.raises(RuntimeError):
+        for _ in range(4):
+            proto.run_round(ds.round_batches(16))
+    with pytest.raises(RuntimeError):
+        proto.flush()
+    with pytest.raises(RuntimeError):                    # sticky
+        proto.flush()
+    # nothing was applied or committed: genesis only, stakes untouched
+    assert len(proto.ledger.blocks) == 1
+    np.testing.assert_array_equal(proto.contract.stake, stake_before)
+    assert proto.contract.requester_balance == 0.0

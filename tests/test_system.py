@@ -1,7 +1,6 @@
 """End-to-end SDFL-B protocol behaviour (the paper's system claims)."""
 import dataclasses
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -89,7 +89,6 @@ def test_aggregate_unbiased_uniform_mean():
 
 
 def test_rotate_heads_is_permutation():
-    fed = FederationConfig(num_clusters=2, workers_per_cluster=4)
     x = {"p": jnp.arange(8.0)[:, None] * jnp.ones((8, 3))}
     rolled = hierarchy.rotate_heads(x, jnp.array([1, 3]))
     assert sorted(np.asarray(rolled["p"])[:, 0].tolist()) == list(range(8))
@@ -123,3 +122,32 @@ def test_async_round_flushes_and_accumulates():
     agg2, state2, wts2 = async_agg.async_round(upd2, scores, mask2, state1, fed)
     assert np.asarray(state2.staleness).tolist() == [1, 1, 0, 0]
     np.testing.assert_allclose(np.asarray(state2.pending["p0"][2]), 0.0)
+
+
+def test_flushed_worker_cannot_double_count():
+    """Regression (settler-pool PR): once a worker's buffered update is
+    flushed by an arrival, replaying the flush in the same round — or the
+    worker arriving again with nothing new — must contribute exactly zero;
+    the hoisted keep-mask must zero pending bit-exactly, never rescale
+    it."""
+    fed = FederationConfig(num_clusters=2, workers_per_cluster=2,
+                           async_mode=True, trust_threshold=0.0)
+    W = 4
+    upd = _updates(jax.random.PRNGKey(7), W, shapes=((6,), (3, 2)))
+    state = async_agg.init_async_state(upd, W)
+    scores = jnp.ones((W,)) * 0.9
+    mask = jnp.array([1, 0, 0, 0])
+    agg1, state1, _ = async_agg.async_round(upd, scores, mask, state, fed)
+    # worker 0's buffer is flushed to exactly zero (no residual scaling)
+    for k in state1.pending:
+        assert float(jnp.max(jnp.abs(state1.pending[k][0]))) == 0.0
+    # same-round replay: worker 0 "arrives" again with a zero fresh update —
+    # its flushed buffer must not be aggregated a second time
+    zero_upd = jax.tree.map(jnp.zeros_like, upd)
+    agg2, state2, _ = async_agg.async_round(zero_upd, scores, mask, state1,
+                                            fed)
+    for k in agg2:
+        np.testing.assert_allclose(np.asarray(agg2[k]), 0.0, atol=1e-7)
+        assert float(jnp.max(jnp.abs(state2.pending[k][0]))) == 0.0
+    # and the first aggregation really did carry worker 0's update
+    assert any(float(jnp.max(jnp.abs(agg1[k]))) > 0 for k in agg1)
