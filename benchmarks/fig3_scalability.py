@@ -187,6 +187,124 @@ def run_sharded_settlement(worker_count: int = 100_000,
     return out
 
 
+def run_multi_task_node(worker_count: int = 100_000,
+                        task_counts=(1, 2, 4), shards: int = 4,
+                        chunk_size: int = 4096, rounds: int = 7,
+                        pool_size: int = 0, seed: int = 0,
+                        perf_gate: bool = True,
+                        json_name: str = "multi_task_node"):
+    """Multi-tenant settlement sweep at fixed *total* W: N co-tenant tasks
+    (worker_count // N workers each) settle every round into ONE
+    multi-task block through the shared shard-worker pool, versus the
+    N=1 single-task serial path on the same total record count.
+
+    Claims pinned: (1) determinism — re-driving the same score stream
+    seals byte-identical chains (the round-robin cross-task schedule is
+    seed-reproducible); (2) per-task super-roots are co-tenancy
+    independent — bit-identical to each task settling alone on its own
+    ledger; (3) the perf gate (``perf_gate``, skip at smoke W where fixed
+    per-task overheads dominate a sub-ms round) — shared-pool multi-task
+    settlement throughput at N > 1 never regresses below the N=1 serial
+    path: the node re-plans each task's shard fan-out against the pool
+    budget, so cross-task parallelism replaces within-task parallelism as
+    N grows. Writes ``BENCH_<json_name>.json`` for the perf trajectory."""
+    import os
+
+    from repro.chain.contract import TrustContract
+    from repro.chain.ledger import Ledger
+    from repro.core.node import (ShardWorkerPool, TaskRoundWork,
+                                 settle_tasks_block)
+
+    def make_contract(led, tid, Wt):
+        c = TrustContract(led, requester_deposit=1e6, worker_stake=10.0,
+                          penalty_pct=50.0, trust_threshold=0.5,
+                          top_k=max(Wt // 100, 1),
+                          merkle_chunk_size=chunk_size,
+                          settlement_shards=shards, task_id=tid)
+        c.join_batch(Wt)
+        return c
+
+    pool = ShardWorkerPool(pool_size or min(shards, os.cpu_count() or 1))
+    t_settle, t_record, tput = {}, {}, {}
+    try:
+        for N in task_counts:
+            Wt = worker_count // N           # N*Wt records actually settle
+                                             # per tick (exact, not W, when
+                                             # N does not divide W)
+            tids = [f"task-{i:02d}" for i in range(N)]
+            scores = np.random.default_rng(seed).random((rounds, N, Wt))
+
+            def drive():
+                led = Ledger()
+                cs = {tid: make_contract(led, tid, Wt) for tid in tids}
+                times, roots = [], []
+                for r in range(rounds):
+                    work = [TaskRoundWork(tid, cs[tid], r, scores[r, i])
+                            for i, tid in enumerate(tids)]
+                    t0 = time.monotonic()
+                    blk, _, errors = settle_tasks_block(
+                        led, work, timestamp=float(r + 1),
+                        pool=pool if N > 1 else None)
+                    times.append(time.monotonic() - t0)
+                    assert not errors
+                    roots.append(led.task_roots(blk.index))
+                assert led.verify_chain(deep=True)
+                return led, times, roots
+
+            led, times, roots = drive()
+            # determinism: the same stream seals byte-identical chains
+            led2, times2, _ = drive()
+            assert [b.hash for b in led.blocks] \
+                == [b.hash for b in led2.blocks], \
+                f"multi-task chains must be reproducible (N={N})"
+            # steady-state capability: min over both drives' post-warmup
+            # rounds — shared 2-vCPU runners show intermittent 3-5x
+            # scheduling spikes that a 4-sample median does not absorb
+            samples = (times[1:] or times) + (times2[1:] or times2)
+            t_settle[N] = float(min(samples))
+            t_record[N] = t_settle[N] / (N * Wt)
+            tput[N] = 1.0 / t_record[N]
+            # per-task commits are co-tenancy independent: spot-check two
+            # tasks against standalone single-tenant runs
+            for i, tid in enumerate(tids[:2]):
+                solo_led = Ledger()
+                solo = make_contract(solo_led, tid, Wt)
+                for r in range(rounds):
+                    solo.settle_round_batch(r, scores[r, i],
+                                            timestamp=float(r + 1))
+                assert [roots[r][tid] for r in range(rounds)] \
+                    == [b.records_root for b in solo_led.blocks[1:]], \
+                    f"task {tid} super-roots must be co-tenancy independent"
+            csv_row(f"fig3_multi_task_node_w{worker_count}_n{N}",
+                    t_settle[N] * 1e6,
+                    f"tasks={N} shards={shards} k={chunk_size} "
+                    f"records_per_s={tput[N] / 1e6:.2f}M "
+                    f"{'shared-pool' if N > 1 else 'serial'}")
+    finally:
+        pool.stop()
+    serial = t_record.get(1)
+    if perf_gate and serial is not None:
+        for N in task_counts:
+            if N > 1:
+                # the gate, per settled record (exact for any task_counts):
+                # multi-tenancy through the shared pool must not regress
+                # below the single-task serial path. The slack absorbs
+                # shared-2-vCPU jitter (sporadic 30% drift between the N
+                # segments even on min-of-rounds); the failure mode this
+                # pins — N·S micro-thunks convoying on the GIL before
+                # shard re-planning — measured 1.85-2x, well outside it
+                assert t_record[N] < 1.5 * serial, \
+                    f"N={N} shared-pool settle must not regress below " \
+                    f"the N=1 serial path (per-record): {t_record}"
+    bench_json(json_name,
+               {"worker_count": worker_count, "rounds": rounds,
+                "chunk_size": chunk_size, "shards": shards,
+                "settle_s": {f"n{N}": t for N, t in t_settle.items()},
+                "records_per_s": {f"n{N}": t for N, t in tput.items()},
+                "cpu_count": os.cpu_count()})
+    return {"settle_s": t_settle, "records_per_s": tput}
+
+
 def run_chain_scaling(worker_counts=(1_000, 10_000, 100_000), rounds: int = 3,
                       seed: int = 0):
     """Chain-only settlement sweep: full Algorithm 1 round (vectorized
@@ -281,4 +399,5 @@ if __name__ == "__main__":
     run_merkle_chunk_sweep()
     run_chain_scaling()
     run_sharded_settlement()
+    run_multi_task_node()
     run(rounds=30, samples=2048)

@@ -39,6 +39,18 @@ no state is touched until every shard succeeded, a failing shard leaves
 the contract and chain exactly as before the round (no half-settled
 super-root is ever committed).
 
+Multi-tenant settlement (``task_id``): several ``TrustContract`` tasks can
+share one ledger on a chain node. The round settlement is split into three
+composable phases so a node can co-commit many tasks' rounds into one
+multi-task block: ``prepare_round_batch`` (validation + per-shard compute
+thunks, pure), ``finish_round_batch`` (the deterministic merge — state
+transition + transactions + commit parts), and ``note_block`` (audit
+bookkeeping once the block is sealed). ``settle_round_batch`` composes the
+three over a single-task block exactly as before, so the single-tenant
+path is bit-identical. Proofs are task-scoped: ``settlement_proof`` walks
+chunk-in-shard, shard-in-task, and task-in-block levels (the last empty on
+single-task blocks) and verifies against the block's combined root.
+
 The legacy scalar API (``join`` / ``settle_round`` with a score dict /
 dict-like ``workers`` access) is kept as a thin wrapper over the batch
 path, so Algorithm 1 semantics are provably unchanged (see the
@@ -46,8 +58,8 @@ batch-vs-scalar equivalence property test in ``tests/test_chain.py``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Iterator, List, Mapping, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -111,6 +123,29 @@ class ShardSettlement:
     stake_after: np.ndarray        # (stop-start,) post-penalty stakes
     records: RecordBatch           # canonical encodings of this slice
     tree: MerkleTree               # chunked Merkle subtree over the slice
+
+
+@dataclass
+class RoundPrep:
+    """Validated inputs + per-shard compute thunks for one round — the
+    pure (no state mutation) first phase of a settlement, so a multi-task
+    node can fan many tasks' shard thunks out through one shared pool."""
+    round_index: int
+    ids: np.ndarray                # participating worker ids, id order
+    scores: np.ndarray             # aligned scores, float64
+    thunks: List[Callable[[], ShardSettlement]] = field(default_factory=list)
+
+
+@dataclass
+class RoundSeal:
+    """The deterministic merge's output — everything a block needs from
+    one task's round: drained transactions, per-shard commit parts, and
+    the penalty vector. State has already transitioned when this exists."""
+    txs: List[dict]
+    shards: List[RecordBatch]
+    trees: List[MerkleTree]
+    chunk_size: int
+    penalties: np.ndarray
 
 
 class WorkerAccount:
@@ -199,7 +234,8 @@ class TrustContract:
                  worker_stake: float, penalty_pct: float,
                  trust_threshold: float, top_k: int,
                  merkle_chunk_size: int = 64,
-                 settlement_shards: int = 1) -> None:
+                 settlement_shards: int = 1,
+                 task_id: Optional[str] = None) -> None:
         if requester_deposit <= 0:
             raise ContractError("deployment requires a positive deposit")
         if merkle_chunk_size < 1:
@@ -207,6 +243,7 @@ class TrustContract:
         if settlement_shards < 1:
             raise ContractError("settlement_shards must be >= 1")
         self.ledger = ledger
+        self.task_id = task_id         # name on a multi-tenant chain node
         self.F = worker_stake
         self.P = penalty_pct
         self.T = trust_threshold
@@ -300,20 +337,25 @@ class TrustContract:
 
     # -- per-round settlement (Alg. 1 steps 3-7), batch path ------------------
 
-    def shard_bounds(self, num_records: int) -> List[int]:
+    def shard_bounds(self, num_records: int,
+                     shards: Optional[int] = None) -> List[int]:
         """Subtree-aligned record boundaries splitting a round of
-        ``num_records`` settlements into ≤ ``settlement_shards`` slices."""
+        ``num_records`` settlements into ≤ ``shards`` slices (default:
+        this contract's ``settlement_shards``). Because boundaries are
+        subtree-aligned, the committed super-root — and every proof and
+        block hash — is identical for every shard count: callers (e.g. a
+        multi-tenant node balancing N tasks over one pool) may re-plan
+        execution granularity freely."""
         return plan_shard_bounds(num_records, self.merkle_chunk_size,
-                                 self.settlement_shards)
+                                 self.settlement_shards
+                                 if shards is None else shards)
 
     def parallel_fanout_possible(self) -> bool:
         """Whether ``settle_round_batch`` could ever hand shards to a pool:
         more than one shard configured AND chunk leaves clear the GIL
         threshold. Lets callers skip spawning worker threads that the gate
         would never feed."""
-        return (self.settlement_shards > 1 and
-                self.merkle_chunk_size * _RECORD_DTYPE.itemsize
-                >= self.min_parallel_leaf_bytes)
+        return self.settlement_shards > 1 and self.parallel_leaf_ok()
 
     def settle_shard(self, round_index: int, ids: np.ndarray, s: np.ndarray,
                      start: int, stop: int) -> ShardSettlement:
@@ -335,21 +377,17 @@ class TrustContract:
         return ShardSettlement(start, stop, pen, stake_after, records,
                                MerkleTree(records, self.merkle_chunk_size))
 
-    def settle_round_batch(self, round_index: int, scores: np.ndarray,
-                           worker_ids: Optional[np.ndarray] = None,
-                           model_cid: str = "",
-                           timestamp: Optional[float] = None,
-                           pool=None) -> np.ndarray:
-        """Vectorized settlement: BadWorkers mask, stake-capped penalties,
-        requester transfer, and the Merkle-committed round block — no
-        per-worker Python loop. ``worker_ids`` defaults to all workers (the
-        common full-participation round). ``timestamp`` lets the protocol
-        seal blocks at logical (round-indexed) time so every node — and the
-        threaded vs serial drivers — computes identical block hashes.
-        ``pool`` (any object with ``map(list_of_thunks)``, e.g.
-        ``repro.core.protocol.ShardWorkerPool``) runs the per-shard slices
-        concurrently; the result is bit-identical with or without it.
-        Returns the (len(scores),) penalty vector aligned with ``scores``."""
+    def prepare_round_batch(self, round_index: int, scores: np.ndarray,
+                            worker_ids: Optional[np.ndarray] = None,
+                            shards: Optional[int] = None) -> RoundPrep:
+        """Phase 1 of a settlement: validate inputs and build the per-shard
+        compute thunks (pure — no contract state is touched until
+        ``finish_round_batch``), so a multi-tenant node can interleave many
+        tasks' thunks through one shared worker pool. ``shards`` overrides
+        the execution granularity (consensus-invisible: subtree-aligned
+        boundaries commit the identical root for every shard count). A
+        failure here, or in any thunk, aborts the round with nothing
+        applied and nothing committed."""
         if self.closed:
             raise ContractError("task closed")
         s = np.asarray(scores, np.float64).reshape(-1)
@@ -368,23 +406,29 @@ class TrustContract:
                     f"scores from non-participants: {set(bad.tolist())}")
             if len(np.unique(ids)) != len(ids):
                 raise ContractError("duplicate worker ids in settlement")
+        bounds = self.shard_bounds(len(ids), shards)
+        thunks = [lambda a=a, b=b: self.settle_shard(round_index, ids, s,
+                                                     a, b)
+                  for a, b in zip(bounds, bounds[1:])]
+        return RoundPrep(round_index, ids, s, thunks)
 
-        # fan the round out across contract shards (pure compute, no state
-        # mutation — a shard failure aborts the round with nothing applied
-        # and nothing committed)
-        bounds = self.shard_bounds(len(ids))
-        tasks = [lambda a=a, b=b: self.settle_shard(round_index, ids, s, a, b)
-                 for a, b in zip(bounds, bounds[1:])]
-        leaf_bytes = self.merkle_chunk_size * _RECORD_DTYPE.itemsize
-        if pool is not None and len(tasks) > 1 \
-                and leaf_bytes >= self.min_parallel_leaf_bytes:
-            results: List[ShardSettlement] = pool.map(tasks)
-        else:
-            results = [t() for t in tasks]
+    def parallel_leaf_ok(self) -> bool:
+        """The GIL gate for this contract's leaves: fan shard thunks out to
+        a pool only when one chunk leaf amortizes the release/acquire
+        handoff (see ``MIN_PARALLEL_LEAF_BYTES``)."""
+        return (self.merkle_chunk_size * _RECORD_DTYPE.itemsize
+                >= self.min_parallel_leaf_bytes)
 
-        # deterministic merge: shard order == id order, so the concatenated
-        # vectors (and every reduction over them) are bit-identical to the
-        # unsharded single-slice path
+    def finish_round_batch(self, prep: RoundPrep,
+                           results: List[ShardSettlement],
+                           model_cid: str = "") -> RoundSeal:
+        """Phase 2: the deterministic merge. Applies the state transition
+        from the concatenated per-shard results (shard order == id order,
+        so every reduction is bit-identical to the unsharded path), drains
+        the pending transactions, and returns the block commit parts. Runs
+        only after *every* shard of the round succeeded."""
+        ids, s = prep.ids, prep.scores
+        round_index = prep.round_index
         bad = s < self.T
         if results:
             pen = np.concatenate([r.penalties for r in results])
@@ -407,14 +451,51 @@ class TrustContract:
         if model_cid:
             txs.append({"type": "model", "round": round_index,
                         "cid": model_cid})
-        blk = self.ledger.append_block(
-            txs, timestamp=timestamp,
-            record_shards=[r.records for r in results] or None,
-            shard_trees=[r.tree for r in results] or None,
-            chunk_size=self.merkle_chunk_size)
-        self._round_blocks[round_index] = blk.index
+        return RoundSeal(txs, [r.records for r in results],
+                         [r.tree for r in results],
+                         self.merkle_chunk_size, pen)
+
+    def note_block(self, round_index: int, ids: np.ndarray,
+                   block_index: int) -> None:
+        """Phase 3: audit bookkeeping once the round's block is sealed —
+        keys ``settlement_proof`` to the block that committed it."""
+        self._round_blocks[round_index] = block_index
         self._round_ids[round_index] = ids
-        return pen
+
+    def settle_round_batch(self, round_index: int, scores: np.ndarray,
+                           worker_ids: Optional[np.ndarray] = None,
+                           model_cid: str = "",
+                           timestamp: Optional[float] = None,
+                           pool=None) -> np.ndarray:
+        """Vectorized settlement: BadWorkers mask, stake-capped penalties,
+        requester transfer, and the Merkle-committed round block — no
+        per-worker Python loop. ``worker_ids`` defaults to all workers (the
+        common full-participation round). ``timestamp`` lets the protocol
+        seal blocks at logical (round-indexed) time so every node — and the
+        threaded vs serial drivers — computes identical block hashes.
+        ``pool`` (any object with ``map(list_of_thunks)``, e.g.
+        ``repro.core.node.ShardWorkerPool``) runs the per-shard slices
+        concurrently; the result is bit-identical with or without it.
+        Composes prepare → shard fan-out → merge → seal over a single-task
+        block, which is exactly the pre-multi-tenant settlement path.
+        Returns the (len(scores),) penalty vector aligned with ``scores``."""
+        prep = self.prepare_round_batch(round_index, scores, worker_ids)
+        # fan the round out across contract shards (pure compute, no state
+        # mutation — a shard failure aborts the round with nothing applied
+        # and nothing committed)
+        if pool is not None and len(prep.thunks) > 1 \
+                and self.parallel_leaf_ok():
+            results: List[ShardSettlement] = pool.map(prep.thunks)
+        else:
+            results = [t() for t in prep.thunks]
+        seal = self.finish_round_batch(prep, results, model_cid=model_cid)
+        blk = self.ledger.append_block(
+            seal.txs, timestamp=timestamp,
+            record_shards=seal.shards or None,
+            shard_trees=seal.trees or None,
+            chunk_size=seal.chunk_size, task_id=self.task_id)
+        self.note_block(round_index, prep.ids, blk.index)
+        return seal.penalties
 
     def settle_round(self, round_index: int, scores: Dict[str, float],
                      model_cid: str = "") -> Dict[str, float]:
@@ -473,7 +554,8 @@ class TrustContract:
                     "top_k": int(min(self.k, W)) if W else 0})
         self.ledger.append_block(txs, timestamp=timestamp,
                                  record_batch=records,
-                                 chunk_size=self.merkle_chunk_size)
+                                 chunk_size=self.merkle_chunk_size,
+                                 task_id=self.task_id)
         payout = refund + reward
         return {self._names[i]: float(payout[i]) for i in range(W)}
 
@@ -483,16 +565,20 @@ class TrustContract:
         """O(log(W/k) + k) auditable proof that worker ``worker`` (id or
         name) was settled as recorded in ``round_index``'s block: the
         record's chunk (the k records sharing its Merkle leaf, ``offset``
-        locating the record within it) plus the node path to the root."""
+        locating the record within it) plus the node path to the block
+        root — chunk-in-shard, shard-in-task, and (on multi-task blocks)
+        task-in-block levels concatenated."""
         wid = worker if isinstance(worker, (int, np.integer)) \
             else self._index[worker]
         block_index = self._round_blocks[round_index]
         ids = self._round_ids[round_index]
         pos = int(np.nonzero(ids == wid)[0][0])
-        chunk, offset = self.ledger.record_chunk(block_index, pos)
+        chunk, offset = self.ledger.record_chunk(block_index, pos,
+                                                 task_id=self.task_id)
         return {"block_index": block_index, "leaf_index": pos,
                 "leaf": chunk[offset], "chunk": chunk, "offset": offset,
-                "proof": self.ledger.merkle_proof(block_index, pos),
+                "proof": self.ledger.merkle_proof(block_index, pos,
+                                                  task_id=self.task_id),
                 "root": self.ledger.blocks[block_index].records_root,
                 "record": decode_settlement_record(chunk[offset])}
 

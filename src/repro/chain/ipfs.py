@@ -62,21 +62,37 @@ def _unpack_leaves(blob: bytes):
 
 
 class IPFSStore:
-    """In-process content-addressed store with hash-verified retrieval."""
+    """In-process content-addressed store with hash-verified retrieval.
+
+    Multi-tenant accounting: a store shared by several federated tasks on
+    one chain node tags puts with an ``owner`` (task id), tracking
+    per-owner put counts and logical bytes. Content addressing dedups
+    across owners — two tasks publishing an identical tree store one blob
+    (counted in ``dedup_hits``) while each owner's logical usage is still
+    attributed."""
 
     def __init__(self) -> None:
         self._store: Dict[str, bytes] = {}
         self.bytes_stored = 0
         self.puts = 0
         self.gets = 0
+        self.dedup_hits = 0
+        self.puts_by_owner: Dict[str, int] = {}
+        self.bytes_by_owner: Dict[str, int] = {}
 
-    def put_tree(self, tree: Any) -> str:
+    def put_tree(self, tree: Any, owner: str = None) -> str:
         blob = _pack_tree(tree)
         cid = hashlib.sha256(blob).hexdigest()
         if cid not in self._store:
             self._store[cid] = blob
             self.bytes_stored += len(blob)
+        else:
+            self.dedup_hits += 1
         self.puts += 1
+        if owner is not None:
+            self.puts_by_owner[owner] = self.puts_by_owner.get(owner, 0) + 1
+            self.bytes_by_owner[owner] = \
+                self.bytes_by_owner.get(owner, 0) + len(blob)
         return cid
 
     def get_leaves(self, cid: str):

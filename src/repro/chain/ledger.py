@@ -41,6 +41,24 @@ the shard path to the super-root — is the same ``(side, digest)`` list
 the flat tree emits, verified by the unchanged ``MerkleTree.verify``.
 ``verify_chain(deep=True)`` recurses through shards, rebuilding every
 subtree and the super-root from the stored batches.
+
+Multi-task commits (the multi-tenant chain layout): one chain node may
+serve N concurrent federated tasks, and a block may commit several tasks'
+rounds at once. ``MultiTaskCommit`` layers a third Merkle level over the
+per-task ``ShardedCommit`` super-roots — task roots combine pairwise in
+canonical (sorted ``task_id``) order with the same interior-node rule into
+the block root, and multi-task blocks additionally carry the canonical
+``task_id → super-root`` map (``Block.task_roots``, part of the block
+hash). A settlement proof is then three-level — chunk path in shard,
+shard path in task, task path in block — still one ``(side, digest)``
+list consumed by the unchanged ``MerkleTree.verify``. With a single task
+the task level is a lone root: the block root equals the task's
+super-root, the task path is empty, and ``task_roots`` is omitted from
+the hashed body, so single-task blocks are bit-identical to the
+pre-multi-tenant layout. ``verify_chain(deep=True)`` recurses through
+every task's shards and the task level, and corrupting one task's stored
+records never invalidates another task's proofs (its sibling digests are
+the stored task roots, not the corrupted bytes).
 """
 from __future__ import annotations
 
@@ -346,6 +364,104 @@ class ShardedCommit(Sequence):
         return ShardedCommit(self.shards, self.chunk_size).root
 
 
+# -- multi-task (three-level) commits -----------------------------------------
+
+
+class MultiTaskCommit:
+    """Third Merkle level over per-task ``ShardedCommit`` super-roots.
+
+    ``commits`` maps ``task_id`` (an arbitrary string; ``None`` names the
+    anonymous single-task legacy path) to that task's sharded commit. Task
+    roots combine pairwise bottom-up in canonical (sorted task id) order
+    with the interior-node rule into the block root. A record proof is the
+    task's own two-level proof followed by the task path — with a single
+    task the root equals the task's super-root and the task path is empty,
+    so single-task commits are bit-identical to a bare ``ShardedCommit``.
+    Each task's chunk size may differ (heterogeneous tenants)."""
+
+    __slots__ = ("task_ids", "commits", "task_levels", "hash_ops")
+
+    def __init__(self, commits: Dict[Optional[str], ShardedCommit]) -> None:
+        if not commits:
+            raise ValueError("MultiTaskCommit needs at least one task commit")
+        if len(commits) > 1 and any(t is None for t in commits):
+            raise ValueError("anonymous task commit only allowed alone")
+        self.task_ids: List[Optional[str]] = (
+            sorted(commits) if len(commits) > 1 else list(commits))
+        self.commits: Dict[Optional[str], ShardedCommit] = {
+            t: commits[t] for t in self.task_ids}
+        level = [c.super_levels[-1][0] for c in self.commits.values()]
+        self.task_levels: List[List[bytes]] = [level]
+        task_ops = 0
+        while len(level) > 1:
+            level, ops = _combine(level)
+            task_ops += ops
+            self.task_levels.append(level)
+        self.hash_ops = sum(c.hash_ops for c in self.commits.values()) \
+            + task_ops
+
+    @property
+    def num_tasks(self) -> int:
+        return len(self.task_ids)
+
+    @property
+    def root(self) -> str:
+        return self.task_levels[-1][0].hex()
+
+    def task_roots(self) -> Dict[Optional[str], str]:
+        """The canonical ``task_id → super-root`` map this commit binds."""
+        return {t: c.root for t, c in self.commits.items()}
+
+    def _resolve(self, task_id: Optional[str]) -> Optional[str]:
+        if task_id is None:
+            if self.num_tasks == 1:
+                return self.task_ids[0]
+            raise KeyError(
+                "block commits multiple tasks; a task_id is required")
+        if task_id not in self.commits:
+            raise KeyError(f"no commit for task {task_id!r}")
+        return task_id
+
+    def commit_for(self, task_id: Optional[str] = None) -> ShardedCommit:
+        """One task's sharded commit (``task_id`` optional when the block
+        commits a single task — the legacy single-tenant accessors)."""
+        return self.commits[self._resolve(task_id)]
+
+    def task_path(self, task_id: Optional[str] = None
+                  ) -> List[Tuple[str, str]]:
+        """Sibling path from a task's super-root to the block root — the
+        cross-task (third) level of a settlement proof."""
+        tid = self._resolve(task_id)
+        return _path_through(self.task_levels[:-1], self.task_ids.index(tid))
+
+    def record_proof(self, record_index: int,
+                     task_id: Optional[str] = None) -> List[Tuple[str, str]]:
+        """Three-level node path: chunk path inside the record's shard, the
+        shard path to the task's super-root, then the task path to the
+        block root. ``MerkleTree.verify`` consumes it unchanged."""
+        tid = self._resolve(task_id)
+        return self.commits[tid].record_proof(record_index) \
+            + self.task_path(tid)
+
+    def record_chunk(self, record_index: int,
+                     task_id: Optional[str] = None
+                     ) -> Tuple[List[bytes], int]:
+        return self.commit_for(task_id).record_chunk(record_index)
+
+    def tamper(self, record_index: int, leaf: bytes,
+               task_id: Optional[str] = None) -> None:
+        """Test hook: corrupt one task's stored record in place."""
+        self.commit_for(task_id).tamper(record_index, leaf)
+
+    def recompute_root(self) -> str:
+        """Block root rebuilt from every task's stored batches (deep
+        verification — recurses through each task's shard subtrees, its
+        super levels, and the cross-task task level)."""
+        rebuilt = {t: ShardedCommit(c.shards, c.chunk_size)
+                   for t, c in self.commits.items()}
+        return MultiTaskCommit(rebuilt).root
+
+
 @dataclass
 class Block:
     index: int
@@ -353,6 +469,9 @@ class Block:
     transactions: List[dict]
     timestamp: float
     records_root: str = ""    # Merkle root of the batch commit ("" if none)
+    # canonical task_id → super-root map of a multi-task block; None when
+    # the block commits at most one task (single-task hashes stay stable)
+    task_roots: Optional[Dict[str, str]] = None
     hash: str = ""
 
     def compute_hash(self) -> str:
@@ -360,6 +479,8 @@ class Block:
                 "txs": self.transactions, "ts": self.timestamp}
         if self.records_root:       # keep genesis/legacy block hashes stable
             body["records_root"] = self.records_root
+        if self.task_roots:         # multi-task layout only — a single-task
+            body["task_roots"] = self.task_roots   # block hashes like PR-3
         return sha256(canonical(body))
 
 
@@ -373,32 +494,24 @@ class Ledger:
         genesis.hash = genesis.compute_hash()
         self.blocks: List[Block] = [genesis]
         self.work_units: int = 0          # hashing/verification operations done
-        # off-chain data availability: per-block sharded commit (batches +
-        # subtrees + super levels); single-shard commits additionally mirror
-        # their tree into _record_trees (the pre-sharding introspection API)
-        self._commits: Dict[int, ShardedCommit] = {}
+        # off-chain data availability: per-block multi-task commit (per-task
+        # batches + shard subtrees + super levels + the task level);
+        # single-task single-shard commits additionally mirror their tree
+        # into _record_trees (the pre-sharding introspection API)
+        self._commits: Dict[int, MultiTaskCommit] = {}
         self._record_trees: Dict[int, MerkleTree] = {}
 
     @property
     def head(self) -> Block:
         return self.blocks[-1]
 
-    def append_block(self, transactions: List[dict],
-                     timestamp: Optional[float] = None,
-                     record_batch: Optional[Records] = None,
-                     chunk_size: int = 1,
-                     record_shards: Optional[Sequence[Records]] = None,
-                     shard_trees: Optional[Sequence[MerkleTree]] = None
-                     ) -> Block:
-        """Seal a block. Canonically-encoded per-worker settlement records
-        are Merkle-committed into the block hash via ``records_root`` with
-        ``chunk_size`` records per leaf; the records themselves stay
-        off-chain but per-record auditable (``merkle_proof`` /
-        ``record_chunk``). Pass either ``record_batch`` (one flat batch) or
-        ``record_shards`` (per-shard batches, optionally with their
-        ``shard_trees`` prebuilt in parallel by a settler pool) — with
-        subtree-aligned shards both commit the identical root."""
-        commit = None
+    @staticmethod
+    def _build_commit(record_batch: Optional[Records],
+                      record_shards: Optional[Sequence[Records]],
+                      shard_trees: Optional[Sequence[MerkleTree]],
+                      chunk_size: int) -> Optional[ShardedCommit]:
+        """One task's sharded commit from either a flat batch or per-shard
+        batches (with optional prebuilt trees); None when empty."""
         if record_shards is not None:
             if shard_trees is not None and \
                     len(shard_trees) != len(record_shards):
@@ -407,79 +520,141 @@ class Ledger:
             # shard↔tree pairing survives the filter
             keep = [i for i, s in enumerate(record_shards) if len(s)]
             if keep:
-                commit = ShardedCommit(
+                return ShardedCommit(
                     [record_shards[i] for i in keep], chunk_size,
                     trees=None if shard_trees is None
                     else [shard_trees[i] for i in keep])
         elif record_batch is not None and len(record_batch):
-            commit = ShardedCommit([record_batch], chunk_size)
+            return ShardedCommit([record_batch], chunk_size)
+        return None
+
+    def _seal(self, transactions: List[dict], timestamp: Optional[float],
+              commit: Optional[MultiTaskCommit]) -> Block:
         blk = Block(len(self.blocks), self.head.hash, list(transactions),
                     time.monotonic() if timestamp is None else timestamp,
-                    records_root=commit.root if commit is not None else "")
+                    records_root=commit.root if commit is not None else "",
+                    task_roots={t: r for t, r in commit.task_roots().items()}
+                    if commit is not None and commit.num_tasks > 1 else None)
         blk.hash = blk.compute_hash()
         # verification pass every append (each node re-hashes the new block);
-        # batched commits add their ~2·ceil(n/k)−1 Merkle hashes
+        # batched commits add their ~2·ceil(n/k)−1 Merkle hashes per task
         self.work_units += 1 + len(transactions)
         if commit is not None:
             self.work_units += commit.hash_ops
             self._commits[blk.index] = commit
-            if commit.num_shards == 1:
-                self._record_trees[blk.index] = commit.trees[0]
+            if commit.num_tasks == 1:
+                only = commit.commit_for()
+                if only.num_shards == 1:
+                    self._record_trees[blk.index] = only.trees[0]
         self.blocks.append(blk)
         return blk
 
+    def append_block(self, transactions: List[dict],
+                     timestamp: Optional[float] = None,
+                     record_batch: Optional[Records] = None,
+                     chunk_size: int = 1,
+                     record_shards: Optional[Sequence[Records]] = None,
+                     shard_trees: Optional[Sequence[MerkleTree]] = None,
+                     task_id: Optional[str] = None) -> Block:
+        """Seal a single-task block. Canonically-encoded per-worker
+        settlement records are Merkle-committed into the block hash via
+        ``records_root`` with ``chunk_size`` records per leaf; the records
+        themselves stay off-chain but per-record auditable
+        (``merkle_proof`` / ``record_chunk``). Pass either ``record_batch``
+        (one flat batch) or ``record_shards`` (per-shard batches, optionally
+        with their ``shard_trees`` prebuilt in parallel by a settler pool) —
+        with subtree-aligned shards both commit the identical root.
+        ``task_id`` names the committing task on a multi-tenant node; block
+        hashes are task-id independent for single-task blocks."""
+        commit = self._build_commit(record_batch, record_shards, shard_trees,
+                                    chunk_size)
+        return self._seal(transactions, timestamp,
+                          MultiTaskCommit({task_id: commit})
+                          if commit is not None else None)
+
+    def append_multi_block(self, transactions: List[dict],
+                           timestamp: Optional[float],
+                           task_commits: Dict[str, ShardedCommit]) -> Block:
+        """Seal a multi-task block committing several tasks' rounds at
+        once: the canonical ``task_id → super-root`` map enters the block
+        hash (``task_roots``) and the ``records_root`` is the cross-task
+        combined root. With exactly one task this is bit-identical to
+        ``append_block`` — co-tenancy, like shard count, only becomes
+        consensus-visible when a block genuinely carries several tasks."""
+        commits = {t: c for t, c in task_commits.items() if c is not None}
+        return self._seal(transactions, timestamp,
+                          MultiTaskCommit(commits) if commits else None)
+
     def verify_chain(self, deep: bool = False) -> bool:
         """Hash-chain integrity; ``deep=True`` additionally recurses through
-        every stored commit — rebuilding each shard subtree and the
-        cross-shard super-root — against its block commitment."""
+        every stored commit — rebuilding each task's shard subtrees, its
+        cross-shard super-root, and the cross-task task level — against the
+        block commitment (including the ``task_roots`` map)."""
         prev = self.GENESIS_HASH
         for blk in self.blocks:
             if blk.prev_hash != prev or blk.hash != blk.compute_hash():
                 return False
             if deep and blk.index in self._commits:
-                if self._commits[blk.index].recompute_root() \
-                        != blk.records_root:
+                commit = self._commits[blk.index]
+                if commit.recompute_root() != blk.records_root:
+                    return False
+                if blk.task_roots is not None and \
+                        blk.task_roots != commit.task_roots():
                     return False
             prev = blk.hash
         return True
 
     # -- per-record audit -----------------------------------------------------
 
-    def record_batch(self, block_index: int) -> Records:
-        """The block's committed records as one concatenated sequence
+    def task_ids(self, block_index: int) -> List[Optional[str]]:
+        """Tasks committed in a block, canonical order."""
+        return list(self._commits[block_index].task_ids)
+
+    def task_roots(self, block_index: int) -> Dict[Optional[str], str]:
+        """The block's canonical ``task_id → super-root`` map."""
+        return self._commits[block_index].task_roots()
+
+    def record_batch(self, block_index: int,
+                     task_id: Optional[str] = None) -> Records:
+        """One task's committed records as one concatenated sequence
         (shard-agnostic view; single-shard commits return the batch)."""
-        commit = self._commits[block_index]
+        commit = self._commits[block_index].commit_for(task_id)
         return commit.shards[0] if commit.num_shards == 1 else commit
 
-    def record_chunk_size(self, block_index: int) -> int:
-        return self._commits[block_index].chunk_size
+    def record_chunk_size(self, block_index: int,
+                          task_id: Optional[str] = None) -> int:
+        return self._commits[block_index].commit_for(task_id).chunk_size
 
-    def num_shards(self, block_index: int) -> int:
-        return self._commits[block_index].num_shards
+    def num_shards(self, block_index: int,
+                   task_id: Optional[str] = None) -> int:
+        return self._commits[block_index].commit_for(task_id).num_shards
 
-    def shard_roots(self, block_index: int) -> List[str]:
-        """Per-shard subtree roots under the block's super-root."""
-        return self._commits[block_index].shard_roots()
+    def shard_roots(self, block_index: int,
+                    task_id: Optional[str] = None) -> List[str]:
+        """Per-shard subtree roots under a task's super-root."""
+        return self._commits[block_index].commit_for(task_id).shard_roots()
 
-    def merkle_proof(self, block_index: int,
-                     record_index: int) -> List[Tuple[str, str]]:
-        """O(log(n/k)) two-level node path — the chunk path inside the
-        record's shard plus the shard path to the super-root — for one
-        settlement record of a batched block; auditing worker w never
+    def merkle_proof(self, block_index: int, record_index: int,
+                     task_id: Optional[str] = None) -> List[Tuple[str, str]]:
+        """O(log(n/k)) three-level node path — the chunk path inside the
+        record's shard, the shard path to its task's super-root, and the
+        task path to the block root (empty for single-task blocks) — for
+        one settlement record of a batched block; auditing worker w never
         rehashes the round."""
-        return self._commits[block_index].record_proof(record_index)
+        return self._commits[block_index].record_proof(record_index, task_id)
 
-    def record_chunk(self, block_index: int,
-                     record_index: int) -> Tuple[List[bytes], int]:
+    def record_chunk(self, block_index: int, record_index: int,
+                     task_id: Optional[str] = None
+                     ) -> Tuple[List[bytes], int]:
         """The chunk of records whose leaf commits ``record_index``, plus
         the record's offset within it — what an auditor ships alongside the
         node path so a verifier can recompute the leaf."""
-        return self._commits[block_index].record_chunk(record_index)
+        return self._commits[block_index].record_chunk(record_index, task_id)
 
     def verify_record(self, block_index: int, record_index: int,
                       leaf: Optional[bytes] = None,
-                      proof: Optional[Sequence[Tuple[str, str]]] = None
-                      ) -> bool:
+                      proof: Optional[Sequence[Tuple[str, str]]] = None,
+                      task_id: Optional[str] = None) -> bool:
         """Check one record against the on-chain root (record/proof default
         to the ledger's own stored copies; pass externally-held values to
         audit a third party's claim). The leaf is recomputed from the
@@ -487,17 +662,17 @@ class Ledger:
         blk = self.blocks[block_index]
         if not blk.records_root:
             return False
-        chunk, offset = self.record_chunk(block_index, record_index)
+        chunk, offset = self.record_chunk(block_index, record_index, task_id)
         if leaf is not None:
             chunk[offset] = leaf
         if proof is None:
-            proof = self.merkle_proof(block_index, record_index)
+            proof = self.merkle_proof(block_index, record_index, task_id)
         return MerkleTree.verify(b"".join(chunk), proof, blk.records_root)
 
     def tamper_record(self, block_index: int, record_index: int,
-                      leaf: bytes) -> None:
+                      leaf: bytes, task_id: Optional[str] = None) -> None:
         """Test hook: corrupt an off-chain settlement record in place."""
-        self._commits[block_index].tamper(record_index, leaf)
+        self._commits[block_index].tamper(record_index, leaf, task_id)
 
     @staticmethod
     def randomness_from(head_hash: str, round_index: int) -> int:

@@ -143,6 +143,10 @@ INPUT_SHAPES: dict[str, ShapeConfig] = {
 @dataclass(frozen=True)
 class FederationConfig:
     """SDFL-B protocol configuration (the paper's technique)."""
+    task_id: str = "task-0"                 # name of this task on a (possibly
+                                            # multi-tenant) chain node — keys
+                                            # its contract's commits in
+                                            # multi-task blocks
     num_clusters: int = 4
     workers_per_cluster: int = 4            # data axis = clusters * workers
     # Algorithm 1 economics
@@ -184,7 +188,10 @@ class FederationConfig:
                                             # gate could feed them; an explicit
                                             # size forces the spawn; effective
                                             # only with pipeline_depth > 0 and
-                                            # shards > 1)
+                                            # shards > 1). On a multi-tenant
+                                            # ChainNode the pool is shared:
+                                            # node-level sizing takes the max
+                                            # shard count across tasks
 
 
 @dataclass(frozen=True)

@@ -1,583 +1,142 @@
-"""SDFLBProtocol — host-level orchestration of the paper's full workflow
-(§III.B/C): enrollment + staking on the contract, clustered local training
-(the jitted ``fl_step``), trust scoring + on-chain settlement per round,
-IPFS publication of cluster/global aggregates, deterministic head rotation
-from on-chain randomness, and optional asynchronous arrivals.
+"""SDFLBProtocol — one-task compatibility wrapper over a private
+``ChainNode`` (see ``repro.core.node``, where the orchestration now
+lives).
 
-Threaded multi-round pipeline: ``run_round`` dispatches round r's jitted
-``_round_fn`` and hands round r−1's host-side chain work (contract
-settlement, chunked Merkle commitment, IPFS publication) to a background
-*settler pool* (``_SettlerPool``) — a coordinator thread draining a
-bounded queue of pending rounds (``fed.pipeline_depth``; 0 settles inline,
-reproducing the serial driver) that fans each round's per-shard contract
-slices (``fed.settlement_shards``) out to N shard-worker threads
-(``ShardWorkerPool``, sized by ``fed.settler_pool_size``) over per-shard
-queues, and seals the block over the cross-shard super-root only at the
-merge barrier, after every shard succeeded. Chain work therefore never
-occupies the training thread — the training-path ``chain_time`` is the
-queue handoff only, multiple rounds can be in flight, and within a round
-the shard subtrees hash in parallel. Shard boundaries are Merkle-subtree
-aligned, so shard count never changes block hashes: S=1, S=8 and the
-serial driver produce byte-identical chains (property-tested).
+Historically this module held the whole host-level driver: enrollment +
+staking, the jitted ``fl_step`` dispatch, trust scoring + on-chain
+settlement, IPFS publication, head rotation from on-chain randomness,
+the background settler pool, and the sharded Merkle commits. The
+multi-tenant refactor carved that into two layers — ``ChainNode`` (the
+shared chain substrate: ledger, IPFS store, shard worker pool, cross-task
+settlement scheduler) and ``FederatedTask`` (everything task-scoped) —
+because the paper's blockchain is shared infrastructure: many federated
+tasks settle on one chain.
 
-Decision sequences are byte-identical to the serial driver: the settler
-publishes each settled round's chain head, and round r's head rotation
-blocks only at the point it consumes the head of round r−1's block
-(reputation-weighted election likewise waits for reputation through round
-r−1 before electing). Blocks are sealed at logical (round-indexed)
-timestamps, so serial and threaded runs — and every node re-deriving the
-chain — agree on block hashes, on-chain randomness, and elections.
-Settled state (ledger blocks, contract balances, reputation, per-round
-``penalties``/``model_cid``/``settle_time``) is written by the settler
-thread; read it after ``flush()`` (called by ``finalize``, idempotent,
-safe to call mid-queue — it drains the backlog), or rely on the fact that
-rounds ≤ r−1 are settled once ``run_round(r)`` returns whenever head
-rotation consumes chain heads. Settler exceptions are re-raised on the
-training thread at the next ``run_round``/``flush``.
+``SDFLBProtocol`` keeps the original single-task API intact by driving a
+private node with exactly one task: ``run_round`` is a one-task
+``run_tick``, and every attribute of the old protocol (``ledger``,
+``contract``, ``history``, ``heads``, ``reputation``, ``global_params``,
+``_shard_pool``, …) resolves onto the task or the node. With one task,
+every block hash, proof, election, penalty, and payout is bit-identical
+to the pre-refactor sharded driver — the single-task tick seals the exact
+single-tenant block layout (property-tested in
+``tests/test_multi_task_node.py`` and pinned by the serial-vs-threaded
+equivalence tests).
 
-Chain work is array-native end to end: workers are integer ids on the
-struct-of-arrays contract (``settle_round_batch``), blocks commit
-per-worker records via a chunked Merkle root (``fed.merkle_chunk_size``
-records per leaf — ~2·W/k hashes per commit) rather than W transaction
-dicts, and the round's global model is serialized to IPFS once, with the C
-cluster heads registering the same cid (identical fully-synchronized tree
-— one put, C registrations).
-
-Runs the paper's small-scale experiments end-to-end on CPU (Figs. 2-6);
-the same jitted round is what the production launcher shards over pods.
+Pipelining semantics are unchanged: ``run_round`` dispatches round r's
+jitted step, hands round r−1's host chain work to the node's settler
+(``fed.pipeline_depth``; 0 settles inline, reproducing the serial
+reference driver), and blocks only where round r's on-chain randomness
+consumes round r−1's block head. Settled state (ledger blocks, contract
+balances, reputation, per-round ``penalties``/``model_cid``/
+``settle_time``) is written by the settler thread; read it after
+``flush()`` (idempotent, safe mid-queue), or rely on rounds ≤ r−1 being
+settled once ``run_round(r)`` returns whenever head rotation consumes
+chain heads. Settler exceptions re-raise on the training thread at the
+next ``run_round``/``flush`` (now as ``TaskSettlementError``, naming the
+task and the failing round).
 """
 from __future__ import annotations
 
-import os
-import queue
-import threading
-import time
-import weakref
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.chain.contract import TrustContract
-from repro.chain.ipfs import IPFSStore
-from repro.chain.ledger import Ledger
 from repro.configs.base import FederationConfig, ModelConfig, TrainConfig
-from repro.core import async_agg, fl_step
-from repro.core.gossip import ClusterExchange
-from repro.core.reputation import ReputationBook
-from repro.models import api
+# re-exports: these classes lived here before the multi-tenant refactor
+from repro.core.node import (ChainNode, FederatedTask, RoundRecord,
+                             ShardWorkerPool, TaskSettlementError,
+                             _PendingRound, _SettlerPool)
 
-
-@dataclass
-class RoundRecord:
-    round_index: int
-    scores: np.ndarray
-    weights: np.ndarray
-    losses: np.ndarray
-    penalties: np.ndarray          # (W,) settlement penalties; zeros until
-                                   # the round is settled (pipelined driver)
-    heads: List[int]
-    model_cid: str                 # "" until settled
-    wall_time: float
-    chain_time: float              # chain work charged to the training
-                                   # thread during this call (threaded
-                                   # settler: the queue handoff only)
-    participation: Optional[np.ndarray] = None
-    settled: bool = False
-    settle_time: float = 0.0       # host chain work on the settler thread
-                                   # (contract + Merkle + IPFS); set when
-                                   # the round settles
-
-
-@dataclass
-class _PendingRound:
-    record: RoundRecord
-    params: Any                    # round's resulting global params (device);
-                                   # None when running without a chain
-    scores: np.ndarray
-
-
-class ShardWorkerPool:
-    """N shard-worker threads, each draining its own task queue.
-
-    ``map`` fans one round's shard thunks out — shard i always lands on
-    queue i mod N, so a given contract shard runs on the same worker and
-    its work stays FIFO across rounds — and blocks at the merge barrier
-    until every thunk finished, then re-raises the lowest-shard-index
-    failure (deterministic, whichever thread hit it first). Thunks must be
-    pure compute (the contract's ``settle_shard`` mutates nothing), so
-    after a failure the survivors' results are simply dropped.
-
-    Workers hold only a weak reference to the pool and wake periodically
-    while idle, so an abandoned (never-finalized) protocol's shard threads
-    exit instead of living for the rest of the process."""
-
-    _IDLE_POLL_S = 2.0
-
-    def __init__(self, num_threads: int) -> None:
-        self.num_threads = max(1, int(num_threads))
-        self._queues: List["queue.Queue"] = [queue.Queue()
-                                             for _ in range(self.num_threads)]
-        self._stopped = False
-        ref = weakref.ref(self)
-        self._threads = [
-            threading.Thread(target=self._work, args=(q, ref), daemon=True,
-                             name=f"sdflb-shard-worker-{i}")
-            for i, q in enumerate(self._queues)]
-        for t in self._threads:
-            t.start()
-
-    @staticmethod
-    def _work(q: "queue.Queue", pool_ref: "weakref.ref") -> None:
-        while True:
-            try:
-                item = q.get(timeout=ShardWorkerPool._IDLE_POLL_S)
-            except queue.Empty:
-                if pool_ref() is None:         # owner got collected
-                    return
-                continue
-            if item is None:                   # stop sentinel
-                return
-            fn, i, out, cv, remaining = item
-            try:
-                out[i] = ("ok", fn())
-            except BaseException as e:
-                out[i] = ("err", e)
-            finally:
-                del fn, item                   # don't pin results while idle
-                with cv:
-                    remaining[0] -= 1
-                    cv.notify_all()
-
-    def map(self, thunks) -> list:
-        """Run ``thunks[i]`` on worker i mod N; return their results in
-        order, or raise the first (by index) failure after all finished."""
-        if self._stopped:
-            raise RuntimeError("shard pool already stopped")
-        thunks = list(thunks)
-        if not thunks:
-            return []
-        out: list = [None] * len(thunks)
-        cv = threading.Condition()
-        remaining = [len(thunks)]
-        for i, fn in enumerate(thunks):
-            self._queues[i % self.num_threads].put((fn, i, out, cv,
-                                                    remaining))
-        with cv:
-            cv.wait_for(lambda: remaining[0] == 0)
-        for tag, val in out:
-            if tag == "err":
-                raise val
-        return [val for _, val in out]
-
-    def stop(self) -> None:
-        """Terminate the workers (idempotent); outstanding queue items run
-        first since the sentinel sits behind them."""
-        if self._stopped:
-            return
-        self._stopped = True
-        for q in self._queues:
-            q.put(None)
-        for t in self._threads:
-            t.join()
-
-
-class _SettlerPool:
-    """Background settlement pool: a coordinator daemon thread consuming a
-    bounded queue of pending rounds, settling each in submission order —
-    fanning its contract shards out to the ``ShardWorkerPool`` and sealing
-    the block at the merge barrier — and publishing the resulting chain
-    head per round.
-
-    The training thread interacts through three calls: ``submit`` (the
-    queue handoff — blocks only when ``depth`` rounds are already in
-    flight), ``wait_settled(r)`` (returns round r's published chain head,
-    blocking until the settler has produced it — the *only* point the
-    pipeline couples back to chain state, because round r+1's on-chain
-    randomness needs round r's block hash), and ``flush`` (drain
-    everything submitted; idempotent). A settle exception — including a
-    single shard failing at the fan-out, which aborts its round before
-    anything was applied or committed (shards mutate nothing; the merge
-    runs only after all of them succeed, so no half-settled super-root
-    ever reaches the chain) — is sticky: the coordinator stops settling
-    (queued rounds are drained and discarded so nothing commits on top of
-    a half-settled chain) and every subsequent interaction re-raises on
-    the training thread.
-
-    The protocol is held through a weak reference and the worker wakes
-    periodically while idle, so an abandoned (never-finalized) protocol is
-    still garbage-collectable and its settler threads exit instead of
-    pinning params/ledger for the life of the process."""
-
-    _IDLE_POLL_S = 2.0
-
-    def __init__(self, settle_fn: Callable[["_PendingRound"], Optional[str]],
-                 depth: int, initial_head: Optional[str],
-                 shard_pool: Optional[ShardWorkerPool] = None) -> None:
-        # weak: the thread must not keep the owning protocol alive
-        self._settle = weakref.WeakMethod(settle_fn)
-        self.shard_pool = shard_pool
-        self._q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
-        self._cv = threading.Condition()
-        self._submitted = -1
-        self._settled = -1
-        self._heads: Dict[int, Optional[str]] = {-1: initial_head}
-        self._error: Optional[BaseException] = None
-        self._stopped = False
-        self._thread = threading.Thread(target=self._loop, daemon=True,
-                                        name="sdflb-settler-coordinator")
-        self._thread.start()
-
-    # -- worker side ---------------------------------------------------------
-
-    def _loop(self) -> None:
-        while True:
-            try:
-                item = self._q.get(timeout=self._IDLE_POLL_S)
-            except queue.Empty:
-                if self._settle() is None:         # owner got collected
-                    return
-                continue
-            if item is None:                       # stop sentinel
-                return
-            ridx = item.record.round_index
-            settle = self._settle()
-            with self._cv:
-                failed = self._error is not None
-            if settle is None or failed:
-                # after a failure (or owner collection) drain-and-discard:
-                # never commit later rounds on top of a half-settled chain,
-                # but keep waking flush()/submit() callers
-                del item, settle
-                with self._cv:
-                    self._settled = max(self._settled, ridx)
-                    self._cv.notify_all()
-                continue
-            try:
-                head = settle(item)
-            except BaseException as e:             # sticky; surfaced on the
-                with self._cv:                     # training thread
-                    self._error = e
-                    self._settled = max(self._settled, ridx)
-                    self._cv.notify_all()
-                continue
-            finally:
-                # frame locals survive across iterations — dropping them
-                # here keeps the idle thread from pinning the protocol (and
-                # the settled round's params) against garbage collection
-                del item, settle
-            with self._cv:
-                self._settled = ridx
-                if head is not None:   # chainless runs never consume heads —
-                    self._heads[ridx] = head   # don't grow the dict forever
-                self._cv.notify_all()
-
-    # -- training-thread side ------------------------------------------------
-
-    def _check_error(self) -> None:
-        if self._error is not None:
-            raise RuntimeError(
-                "background chain settlement failed; the settler has "
-                "stopped (unsettled rounds were discarded)") from self._error
-
-    def submit(self, pending: "_PendingRound") -> None:
-        with self._cv:
-            self._check_error()
-            if self._stopped:
-                raise RuntimeError("settler already stopped")
-            self._submitted = pending.record.round_index
-        self._q.put(pending)                       # bounded: backpressure
-
-    def wait_settled(self, round_index: int) -> Optional[str]:
-        """Block until round ``round_index`` is settled; return its
-        published chain head hash (None when running without a ledger)."""
-        with self._cv:
-            self._cv.wait_for(lambda: self._settled >= round_index
-                              or self._error is not None)
-            self._check_error()
-            head = self._heads.get(round_index)
-            # prune heads no one can ask for again (heads are consumed in
-            # round order; keep the latest two for idempotent re-reads)
-            for k in [k for k in self._heads if k < round_index - 1]:
-                del self._heads[k]
-            return head
-
-    def flush(self) -> None:
-        """Drain the queue: block until everything submitted has settled."""
-        with self._cv:
-            self._cv.wait_for(lambda: self._settled >= self._submitted
-                              or self._error is not None)
-            self._check_error()
-
-    def stop(self) -> None:
-        """Flush, then terminate the coordinator and shard workers
-        (idempotent)."""
-        self.flush()
-        if not self._stopped:
-            self._stopped = True
-            self._q.put(None)
-            self._thread.join()
-            if self.shard_pool is not None:
-                self.shard_pool.stop()
+__all__ = ["SDFLBProtocol", "ChainNode", "FederatedTask", "RoundRecord",
+           "ShardWorkerPool", "TaskSettlementError", "_PendingRound",
+           "_SettlerPool"]
 
 
 class SDFLBProtocol:
-    """One federated task. ``use_blockchain=False`` reproduces the paper's
-    Fig. 2 ablation (identical learning dynamics, no chain work)."""
+    """One federated task on a private single-tenant ``ChainNode``.
+    ``use_blockchain=False`` reproduces the paper's Fig. 2 ablation
+    (identical learning dynamics, no chain work)."""
 
     def __init__(self, cfg: ModelConfig, fed: FederationConfig,
                  tc: TrainConfig, *, use_blockchain: bool = True,
                  seed: int = 0,
-                 adversary: Optional[Callable] = None,
+                 adversary=None,
                  reputation_leaders: bool = False) -> None:
-        self.cfg, self.fed, self.tc = cfg, fed, tc
-        self.use_blockchain = use_blockchain
-        self.W = fl_step.num_workers(fed)
-        self.rng = jax.random.PRNGKey(seed)
-        self.np_rng = np.random.default_rng(seed)
-        self.adversary = adversary    # fn(worker_batch dict, worker_id) -> batch
+        self._node = ChainNode(use_blockchain=use_blockchain,
+                               pipeline_depth=fed.pipeline_depth,
+                               settler_pool_size=fed.settler_pool_size)
+        self._task = self._node.create_task(
+            fed.task_id, cfg, fed, tc, seed=seed, adversary=adversary,
+            reputation_leaders=reputation_leaders)
 
-        key, self.rng = jax.random.split(self.rng)
-        self.global_params, _ = api.init(cfg, key, tp=1)
-        self.opt_state = fl_step.init_worker_opt(self.global_params, fed, tc)
-        self._round_fn = jax.jit(fl_step.make_fl_round(cfg, fed, tc))
-        # eval fns jitted once here (re-wrapping jax.jit per call would
-        # recompile on every invocation)
-        loss_fn = api.loss_fn(cfg)
-        self._eval_fn = jax.jit(loss_fn)
-        self._eval_per_worker_fn = jax.jit(
-            jax.vmap(lambda p, b: loss_fn(p, b)[1], in_axes=(None, 0)))
+    # everything the old monolithic protocol exposed lives on the task
+    # (model/contract/history/reputation/...) or the node (ledger/ipfs/
+    # _shard_pool/...) — resolve attribute reads AND writes there, task
+    # first, so post-construction tweaks like `proto.fed = replace(...)`
+    # or `proto.adversary = fn` keep reaching the state the driver reads
+    def __getattr__(self, name: str):
+        if name.startswith("__"):
+            raise AttributeError(name)
+        d = self.__dict__
+        for obj in (d.get("_task"), d.get("_node")):
+            if obj is not None and hasattr(obj, name):
+                return getattr(obj, name)
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
 
-        self.async_state = None
-        self.scheduler = None
-        if fed.async_mode:
-            updates_like = jax.tree.map(
-                lambda x: jnp.zeros((self.W,) + x.shape, jnp.float32),
-                self.global_params)
-            self.async_state = async_agg.init_async_state(updates_like, self.W)
+    def __setattr__(self, name: str, value) -> None:
+        if not name.startswith("_"):
+            d = self.__dict__
+            for obj in (d.get("_task"), d.get("_node")):
+                # forward plain instance attributes only (properties like
+                # .ledger live on the class and stay read-only)
+                if obj is not None and name in getattr(obj, "__dict__", {}):
+                    setattr(obj, name, value)
+                    return
+        object.__setattr__(self, name, value)
 
-        self.ledger = Ledger() if use_blockchain else None
-        self.ipfs = IPFSStore() if use_blockchain else None
-        self.contract = None
-        if use_blockchain:
-            self.contract = TrustContract(
-                self.ledger, requester_deposit=fed.requester_deposit,
-                worker_stake=fed.worker_stake, penalty_pct=fed.penalty_pct,
-                trust_threshold=fed.trust_threshold, top_k=fed.top_k_rewarded,
-                merkle_chunk_size=fed.merkle_chunk_size,
-                settlement_shards=fed.settlement_shards)
-            self.contract.join_batch(self.W)   # integer ids, one batch tx
-        self.history: List[RoundRecord] = []
-        self.heads = [0] * fed.num_clusters
-        # reputation (EMA of scores + penalty history) drives head election
-        # when reputation_leaders=True — addresses the paper's §VI.E
-        # bad-leader concern while keeping rotation stochastic
-        self.reputation = ReputationBook(self.W)
-        self.reputation_leaders = reputation_leaders
-        self.exchange = (ClusterExchange(self.ipfs, self.ledger,
-                                         fed.num_clusters)
-                         if use_blockchain else None)
-        self._pending: Optional[_PendingRound] = None
-        # depth > 0: chain work runs on the settler pool; 0: inline (the
-        # serial reference driver the equivalence property test pins).
-        # Shard workers spawn only when settlement is sharded, threaded,
-        # and the contract's leaf-size gate could ever feed them (an
-        # explicit settler_pool_size forces the spawn) — the shard
-        # *partition* (and hence every block hash) is identical either
-        # way, the pool only changes who hashes it.
-        self._settler: Optional[_SettlerPool] = None
-        self._shard_pool: Optional[ShardWorkerPool] = None
-        if fed.pipeline_depth > 0:
-            pool_size = fed.settler_pool_size or \
-                min(fed.settlement_shards, os.cpu_count() or 1)
-            if use_blockchain and fed.settlement_shards > 1 \
-                    and pool_size > 1 \
-                    and (fed.settler_pool_size > 0
-                         or self.contract.parallel_fanout_possible()):
-                self._shard_pool = ShardWorkerPool(pool_size)
-            self._settler = _SettlerPool(
-                self._settle_one, fed.pipeline_depth,
-                self.ledger.head.hash if self.ledger is not None else None,
-                shard_pool=self._shard_pool)
+    @property
+    def node(self) -> ChainNode:
+        """The underlying (single-tenant) chain node."""
+        return self._node
 
-    # -- head rotation from on-chain randomness ------------------------------
-
-    def _rotate_heads(self, round_index: int,
-                      head_hash: Optional[str] = None) -> List[int]:
-        """``head_hash``: the chain head the rotation must see (round
-        r−1's block) — published by the settler in threaded mode; defaults
-        to the live ledger head (serial mode, where it is the same block)."""
-        if self.ledger is not None:
-            if head_hash is None:
-                head_hash = self.ledger.head.hash
-            seed = Ledger.randomness_from(head_hash, round_index)
-        else:
-            seed = (self.fed.head_rotation_seed * 1_000_003 + round_index)
-        wpc = self.fed.workers_per_cluster
-        if self.reputation_leaders:
-            self.heads = [
-                self.reputation.elect(range(c * wpc, (c + 1) * wpc),
-                                      rng_seed=seed + c)
-                for c in range(self.fed.num_clusters)]
-        else:
-            rng = np.random.default_rng(seed)
-            self.heads = [int(rng.integers(0, wpc))
-                          for _ in range(self.fed.num_clusters)]
-        return self.heads
-
-    # -- deferred chain work (runs on the settler thread at depth > 0) --------
-
-    def _settle_one(self, p: _PendingRound) -> Optional[str]:
-        """Settle one pending round: IPFS publication, cross-cluster cid
-        registration, contract settlement with the chunked Merkle commit,
-        and the reputation update. Returns the resulting chain head hash
-        (the block other rounds' randomness derives from)."""
-        t0 = time.monotonic()
-        ridx = p.record.round_index
-        head = None
-        if self.use_blockchain:
-            # one IPFS put of the (identical) global tree; every cluster
-            # head registers the cid for the cross-cluster hash exchange
-            # (paper §III.A)
-            cid = self.ipfs.put_tree(p.params)
-            for c in range(self.fed.num_clusters):
-                self.exchange.register(ridx, c, cid)
-            self.contract.pending.extend(self.exchange.round_transactions(ridx))
-            # logical timestamp: every node (and the serial reference
-            # driver) seals byte-identical blocks for the same round; shard
-            # slices fan out to the worker pool when one exists
-            pen = self.contract.settle_round_batch(
-                ridx, p.scores, model_cid=cid, timestamp=float(ridx + 1),
-                pool=self._shard_pool)
-            p.record.model_cid = cid
-            p.record.penalties = pen
-            # O(1) integrity check of the block just sealed (linkage +
-            # recomputed hash) — a full verify_chain here would rehash
-            # every prior block each round, O(R^2) over a run
-            blk = self.ledger.head
-            if (blk.prev_hash != self.ledger.blocks[blk.index - 1].hash
-                    or blk.hash != blk.compute_hash()):
-                raise RuntimeError(
-                    f"round {ridx}: sealed block failed verification")
-            head = blk.hash
-            bad = p.scores < self.contract.T
-        else:
-            bad = np.zeros(self.W, bool)
-        self.reputation.update(p.scores, penalized=bad)
-        p.record.settle_time = time.monotonic() - t0
-        p.record.settled = True
-        return head
-
-    def _hand_off_pending(self) -> None:
-        p, self._pending = self._pending, None
-        if p is None:
-            return
-        if self._settler is not None:
-            self._settler.submit(p)        # queue handoff; work happens on
-        else:                              # the settler thread
-            self._settle_one(p)
-
-    def flush(self) -> None:
-        """Settle every round still in flight: hand off the trailing
-        pending round and drain the settler queue. Idempotent and safe to
-        call mid-queue (no-op when nothing is pending)."""
-        self._hand_off_pending()
-        if self._settler is not None:
-            self._settler.flush()
+    @property
+    def task(self) -> FederatedTask:
+        """The underlying task handle."""
+        return self._task
 
     # -- one full protocol round ----------------------------------------------
 
     def run_round(self, batch: Dict[str, np.ndarray],
                   participation: Optional[np.ndarray] = None) -> RoundRecord:
-        """batch leaves: (W, B, ...) — a single local step per round (paper's
-        setup); reshaped to (W, 1, B, ...) for the step function."""
-        t0 = time.monotonic()
-        ridx = len(self.history)
-
-        batch = {k: jnp.asarray(v)[:, None] for k, v in batch.items()}
-        if self.adversary is not None:
-            batch = self.adversary(batch, ridx)
-        self.rng, rkey = jax.random.split(self.rng)
-        part = (None if participation is None
-                else jnp.asarray(participation, jnp.int32))
-
-        # 1. dispatch this round's jitted step — async, no barrier
-        if self.fed.async_mode:
-            out, self.async_state = self._round_fn(
-                self.global_params, self.opt_state, batch, rkey,
-                part, self.async_state)
-        else:
-            out = self._round_fn(self.global_params, self.opt_state, batch,
-                                 rkey, part)
-        self.global_params, self.opt_state = out.global_params, out.opt_state
-        try:                       # start device→host copy of the scores
-            out.scores.copy_to_host_async()
-        except AttributeError:     # backend without async host copies
-            pass
-
-        # 2. hand the previous round's host chain work to the settler
-        #    (threaded: a queue put; depth 0: settle inline) — either way it
-        #    overlaps this round's device compute
-        tc0 = time.monotonic()
-        self._hand_off_pending()
-        chain_time = time.monotonic() - tc0
-
-        # 3. rotate heads for this round. On-chain randomness needs round
-        #    r−1's block hash (and reputation election its scores), so this
-        #    is the one point the pipeline consumes settled state: block on
-        #    the settler's published head for round r−1 — exactly the chain
-        #    head the serial driver sees. Without chain or reputation
-        #    election the rotation seed is settlement-free and rounds run
-        #    arbitrarily deep into the queue.
-        head_hash = None
-        if self._settler is not None and (self.use_blockchain
-                                          or self.reputation_leaders):
-            head_hash = self._settler.wait_settled(ridx - 1)
-        heads = self._rotate_heads(ridx, head_hash)
-
-        # 4. the only training-path sync point: this round's scores
-        scores = np.asarray(out.scores)
-        train_time = time.monotonic() - t0 - chain_time
-
-        rec = RoundRecord(
-            round_index=ridx, scores=scores, weights=np.asarray(out.weights),
-            losses=np.asarray(out.losses),
-            penalties=np.zeros(self.W, np.float64), heads=heads,
-            model_cid="", wall_time=train_time + chain_time,
-            chain_time=chain_time,
+        """batch leaves: (W, B, ...) — a single local step per round
+        (paper's setup). One single-task node tick."""
+        tid = self._task.task_id
+        recs = self._node.run_tick(
+            {tid: batch},
             participation=None if participation is None
-            else np.asarray(participation))
-        # chainless settlement only reads scores — don't pin up to
-        # pipeline_depth extra param trees in the queue for nothing
-        self._pending = _PendingRound(
-            rec, self.global_params if self.use_blockchain else None, scores)
-        self.history.append(rec)
-        return rec
+            else {tid: participation})
+        return recs[tid]
+
+    def flush(self) -> None:
+        """Settle every round still in flight: hand off the trailing
+        pending round and drain the settler queue. Idempotent and safe to
+        call mid-queue (no-op when nothing is pending)."""
+        self._node.flush()
 
     # -- evaluation ------------------------------------------------------------
 
     def evaluate(self, eval_batch: Dict[str, np.ndarray]) -> Dict[str, float]:
-        batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
-        loss, metrics = self._eval_fn(self.global_params, batch)
-        return {k: float(v) for k, v in metrics.items()}
+        return self._task.evaluate(eval_batch)
 
-    def evaluate_per_worker(self, batch_w: Dict[str, np.ndarray]) -> np.ndarray:
+    def evaluate_per_worker(self, batch_w: Dict[str, np.ndarray]):
         """Per-worker eval accuracy of the *global* model on each worker's
         local shard (the per-worker curves of Figs. 5/6)."""
-        metrics = self._eval_per_worker_fn(
-            self.global_params,
-            {k: jnp.asarray(v) for k, v in batch_w.items()})
-        return {k: np.asarray(v) for k, v in metrics.items()}
+        return self._task.evaluate_per_worker(batch_w)
 
     def finalize(self) -> Dict[str, float]:
-        self.flush()               # drain every in-flight pipelined round
-        if self._settler is not None:
-            self._settler.stop()   # stops the shard workers too
-            self._settler = None
-            self._shard_pool = None
-        if self.contract is not None:
-            return self.contract.finalize(
-                timestamp=float(len(self.history) + 1))
-        return {}
+        payouts = self._task.finalize(
+            timestamp=float(len(self._task.history) + 1))
+        self._node.close()         # stops the settler and shard workers
+        return payouts
