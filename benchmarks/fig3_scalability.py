@@ -9,7 +9,11 @@ stays under 1s on CPU — the regime the ROADMAP's millions-of-users
 north-star needs, far beyond the paper's W=20. ``run_merkle_chunk_sweep``
 isolates the commit itself: chunked leaves (k records per leaf) hash
 ~2·W/k nodes instead of ~2·W, which removed the last O(W)·SHA-256 host
-cost on the settlement path."""
+cost on the settlement path. ``run_sparse_settlement`` takes the last
+step to W=1M: with ≤10% of workers active per tick, sparse delta commits
+re-hash only the dirty chunk paths (O(C·log(W/k)) instead of O(W/k)), so
+a million-worker round settles in delta time proportional to *activity*,
+not population — reported per changed record alongside per worker."""
 from __future__ import annotations
 
 import time
@@ -85,7 +89,7 @@ def run_merkle_chunk_sweep(worker_count: int = 100_000,
 
 def run_sharded_settlement(worker_count: int = 100_000,
                            shard_counts=(1, 4, 8), rounds: int = 7,
-                           chunk_sizes=(64, 4096), pool_size: int = 0,
+                           chunk_sizes=(64, 256, 4096), pool_size: int = 0,
                            seed: int = 0,
                            json_name: str = "sharded_settlement"):
     """Sharded settlement sweep at fixed W: a full Algorithm 1 round
@@ -160,7 +164,12 @@ def run_sharded_settlement(worker_count: int = 100_000,
     parallel_ks = [k for k in chunk_sizes
                    if k * record_size >= MIN_PARALLEL_LEAF_BYTES]
     if 1 in shard_counts and parallel_ks:
-        k = parallel_ks[0]
+        # strict-win gate only at the LARGEST parallel leaves: with the
+        # retuned 4 KiB threshold, mid-size leaves (k=256 -> 10 KiB) are
+        # *allowed* to fan out — each leaf hash clears hashlib's 2 KiB
+        # GIL-release floor — but their win is runner-dependent, so they
+        # only carry a no-regress bound below
+        k = max(parallel_ks)
         serial = t_settle[(k, 1)]
         best = min(t_settle[(k, S)] for S in shard_counts if S >= 4)
         payload["parallel_speedup"] = {"chunk_size": k,
@@ -169,10 +178,19 @@ def run_sharded_settlement(worker_count: int = 100_000,
         csv_row(f"fig3_sharded_speedup_w{W}_k{k}", 0.0,
                 f"best_S>=4_vs_serial={serial / best:.2f}x")
         # the win must be measurable (not asserting a large factor: CI
-        # runners may expose as few as 2 often-throttled cores)
-        assert best < 0.95 * serial, \
-            f"S>=4 settlement must beat serial at k={k}: {t_settle}"
+        # runners may expose as few as 2 often-throttled cores; a 1-core
+        # box has no parallelism to win with, so only the no-regress
+        # bounds apply there)
+        if (os.cpu_count() or 1) >= 2:
+            assert best < 0.95 * serial, \
+                f"S>=4 settlement must beat serial at k={k}: {t_settle}"
         out["parallel_speedup"] = serial / best
+        for k2 in parallel_ks:
+            if k2 == k:
+                continue
+            worst = max(t_settle[(k2, S)] for S in shard_counts)
+            assert worst < 1.5 * t_settle[(k2, 1)], \
+                f"newly-parallel k={k2} must not regress serial: {t_settle}"
     small_ks = [k for k in chunk_sizes
                 if k * record_size < MIN_PARALLEL_LEAF_BYTES]
     if 1 in shard_counts and small_ks:
@@ -185,6 +203,167 @@ def run_sharded_settlement(worker_count: int = 100_000,
     bench_json(json_name, payload)
     out["payload"] = payload
     return out
+
+
+def run_sparse_settlement(worker_count: int = 1_000_000,
+                          active_frac: float = 0.10, rounds: int = 6,
+                          chunk_size: int = 64,
+                          patterns=("cohort", "random"), seed: int = 0,
+                          deep_verify: bool = True,
+                          measure_dense_full: bool = True,
+                          headline_budget_s=0.1, delta_gate_ratio=3.0,
+                          json_name: str = "sparse_settlement"):
+    """Million-worker sparse settlement sweep: W workers enrolled, only
+    C = ``active_frac``·W settle per tick, each tick sealing a
+    ``DeltaCommit`` block that still commits (and proves) the full
+    population.
+
+    Two activity patterns bound the delta cost:
+
+    * ``cohort`` — contiguous disjoint cohorts rotate through the rounds
+      (the paper's cluster-scheduled regime). Dirty chunk leaves = C/k, so
+      delta hashing matches a dense commit over C records and the
+      W=1M/10%-active tick lands under ``headline_budget_s`` (~100 ms on
+      the 2-core CI class of box).
+    * ``random`` — C uniform-random workers. At k=64 and 10% activity
+      nearly *every* chunk is dirtied (E[dirty leaves] ≈ W/k), so the
+      delta degenerates toward a full re-commit; reported honestly as the
+      adversarial bound — the headline gates on ``cohort`` only.
+
+    Costs are reported per *changed* record (delta_s/C — the number that
+    must stay flat as W grows) alongside per enrolled worker (delta_s/W).
+    The regression gate is *relative*: a cohort delta round touching C
+    records must cost < ``delta_gate_ratio``× a dense round of a
+    C-worker contract per record (pop-buffer scatter + overlay clone +
+    O(C·log(W/k)) interior re-hash are the only extras). Extends
+    ``BENCH_chain_scaling.json`` with the W row and writes
+    ``BENCH_<json_name>.json``."""
+    import os
+
+    from repro.chain.contract import TrustContract
+    from repro.chain.ledger import Ledger
+
+    W = worker_count
+    C = max(1, int(W * active_frac))
+    k = chunk_size
+    rng = np.random.default_rng(seed)
+
+    def make(w, sparse):
+        c = TrustContract(Ledger(), requester_deposit=1e6,
+                          worker_stake=10.0, penalty_pct=50.0,
+                          trust_threshold=0.5, top_k=max(w // 100, 1),
+                          merkle_chunk_size=k, sparse_settlement=sparse)
+        c.join_batch(w)
+        return c
+
+    # dense reference: a C-worker contract settling all C per round — the
+    # per-record baseline the delta gate compares against
+    dense_c = make(C, sparse=False)
+    times = []
+    for r in range(max(rounds, 2)):
+        s = rng.random(C)
+        t0 = time.monotonic()
+        dense_c.settle_round_batch(r, s, timestamp=float(r + 1))
+        times.append(time.monotonic() - t0)
+    dense_at_active_s = float(np.median(times[1:]))
+    csv_row(f"fig3_sparse_dense_ref_c{C}", dense_at_active_s * 1e6,
+            f"per_record_us={dense_at_active_s / C * 1e6:.3f}")
+
+    dense_at_full_s = None
+    if measure_dense_full:
+        # one dense full-population round at W — what every tick would
+        # cost without the sparse path
+        dense_w = make(W, sparse=False)
+        times = []
+        for r in range(2):
+            s = rng.random(W)
+            t0 = time.monotonic()
+            dense_w.settle_round_batch(r, s, timestamp=float(r + 1))
+            times.append(time.monotonic() - t0)
+        dense_at_full_s = float(min(times))
+        csv_row(f"fig3_sparse_dense_full_w{W}", dense_at_full_s * 1e6,
+                f"per_worker_us={dense_at_full_s / W * 1e6:.3f}")
+
+    anchor_s, delta_s, dirty = {}, {}, {}
+    for pattern in patterns:
+        c = make(W, sparse=True)
+        times = []
+        for r in range(rounds):
+            if pattern == "cohort":
+                start = (r % max(W // C, 1)) * C
+                ids = np.arange(start, start + C, dtype=np.int64)
+            else:
+                ids = np.sort(rng.permutation(W)[:C]).astype(np.int64)
+            s = rng.random(C)
+            t0 = time.monotonic()
+            c.settle_round_batch(r, s, worker_ids=ids, timestamp=float(r + 1))
+            times.append(time.monotonic() - t0)
+        # round 0 pays the dense anchor (the base commit over all W);
+        # steady state is the delta rounds
+        anchor_s[pattern] = times[0]
+        delta_s[pattern] = float(np.median(times[1:] or times))
+        dirty[pattern] = len(np.unique(ids // k))
+        csv_row(f"fig3_sparse_settle_w{W}_{pattern}",
+                delta_s[pattern] * 1e6,
+                f"active={C} per_changed_us="
+                f"{delta_s[pattern] / C * 1e6:.3f} per_worker_us="
+                f"{delta_s[pattern] / W * 1e6:.4f} "
+                f"dirty_leaves={dirty[pattern]}/{-(-W // k)} "
+                f"anchor_s={anchor_s[pattern]:.3f}")
+        # the full population stays proof-covered every delta round:
+        # an active and an idle worker both verify against the last block
+        last = rounds - 1
+        active_w = int(ids[0])
+        idle_w = int(np.setdiff1d(np.arange(C + 1, dtype=np.int64),
+                                  ids[:C + 1])[0])
+        for wid in (active_w, idle_w):
+            assert c.verify_settlement(c.settlement_proof(last, wid)), \
+                f"worker {wid} proof must verify ({pattern})"
+        if deep_verify:
+            assert c.ledger.verify_chain(deep=True), \
+                f"sparse chain must deep-verify ({pattern})"
+
+    if delta_gate_ratio and "cohort" in delta_s:
+        per_changed = delta_s["cohort"] / C
+        per_dense = dense_at_active_s / C
+        csv_row(f"fig3_sparse_delta_gate_w{W}", 0.0,
+                f"cohort_vs_dense_ref={per_changed / per_dense:.2f}x "
+                f"(gate {delta_gate_ratio}x)")
+        assert per_changed < delta_gate_ratio * per_dense, \
+            f"cohort delta per-changed-record cost must stay within " \
+            f"{delta_gate_ratio}x of a dense C-record round: " \
+            f"{per_changed * 1e6:.3f}us vs {per_dense * 1e6:.3f}us"
+    if headline_budget_s and "cohort" in delta_s:
+        assert delta_s["cohort"] < headline_budget_s, \
+            f"W={W} cohort delta tick must settle under " \
+            f"{headline_budget_s}s: {delta_s['cohort']:.3f}s"
+
+    payload = {"worker_count": W, "active": C, "active_frac": active_frac,
+               "chunk_size": k, "rounds": rounds,
+               "anchor_s": anchor_s, "delta_s": delta_s,
+               "dirty_leaves": dirty,
+               "per_changed_us": {p: t / C * 1e6
+                                  for p, t in delta_s.items()},
+               "per_worker_us": {p: t / W * 1e6
+                                 for p, t in delta_s.items()},
+               "dense_at_active_s": dense_at_active_s,
+               "dense_at_full_s": dense_at_full_s,
+               "cpu_count": os.cpu_count()}
+    bench_json(json_name, payload)
+    # extend the chain-scaling artifact with this W's sparse row (and the
+    # dense full-round time when measured) — merge, don't overwrite: the
+    # dense sweep owns the other rows
+    import json
+    import pathlib
+    p = pathlib.Path("BENCH_chain_scaling.json")
+    data = json.loads(p.read_text()) if p.exists() else {}
+    if dense_at_full_s is not None:
+        data.setdefault("batch_s", {})[str(W)] = dense_at_full_s
+    data.setdefault("sparse_delta_s", {})[str(W)] = delta_s
+    data["sparse_active_frac"] = active_frac
+    p.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    print(f"merged sparse row into {p}")
+    return payload
 
 
 def run_multi_task_node(worker_count: int = 100_000,
@@ -398,6 +577,7 @@ def run_chain_scaling(worker_counts=(1_000, 10_000, 100_000), rounds: int = 3,
 if __name__ == "__main__":
     run_merkle_chunk_sweep()
     run_chain_scaling()
+    run_sparse_settlement()
     run_sharded_settlement()
     run_multi_task_node()
     run(rounds=30, samples=2048)

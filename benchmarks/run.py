@@ -17,7 +17,7 @@ def main() -> None:
                     help="reduced rounds/samples (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig3,fig4,fig56,"
-                         "trust,async,kernels,roofline)")
+                         "trust,async,cfl,chain,kernels,roofline)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     q = args.quick
@@ -44,6 +44,18 @@ def main() -> None:
             rounds=25 if q else 50, samples=2048 if q else 4096),
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
+        # chain-layer scaling: dense batch settlement vs the legacy scalar
+        # path, then the sparse delta path (W=1M at full scale — the
+        # million-worker headline gates on the cohort pattern)
+        "chain": lambda: (
+            fig3_scalability.run_chain_scaling(
+                worker_counts=(1_000, 10_000) if q
+                else (1_000, 10_000, 100_000),
+                rounds=2 if q else 3),
+            fig3_scalability.run_sparse_settlement(
+                worker_count=100_000 if q else 1_000_000,
+                rounds=3 if q else 6,
+                headline_budget_s=None if q else 0.1)),
     }
     failures = []
     for name, fn in suite.items():

@@ -51,6 +51,21 @@ path is bit-identical. Proofs are task-scoped: ``settlement_proof`` walks
 chunk-in-shard, shard-in-task, and task-in-block levels (the last empty on
 single-task blocks) and verifies against the block's combined root.
 
+Sparse settlement (``sparse_settlement=True``): the million-worker path.
+The contract keeps a persistent full-population record buffer (every
+worker's latest settlement record; genesis rows for the never-settled)
+and commits each round as a ``DeltaCommit`` (see ``chain.ledger``): a
+dense anchor on the first round / after enrollment growth / at full
+participation / every ``sparse_rebase_every`` rounds, and otherwise an
+incremental commit that re-hashes only the chunks the round's *changed
+set* dirtied — O(C·log(W/k)) instead of O(W/k) per round, so settlement
+cost scales with activity, not population. Every block still commits the
+full population's root: ``settlement_proof`` covers idle workers (record
+index == worker id), and ``verify_chain(deep=True)`` detects tampering
+with inherited records exactly like with fresh ones. Algorithm 1
+semantics (penalties, stakes, transfers) are unchanged — only the commit
+strategy differs.
+
 The legacy scalar API (``join`` / ``settle_round`` with a score dict /
 dict-like ``workers`` access) is kept as a thin wrapper over the batch
 path, so Algorithm 1 semantics are provably unchanged (see the
@@ -58,13 +73,14 @@ batch-vs-scalar equivalence property test in ``tests/test_chain.py``).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, List, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.chain.ledger import (Ledger, MerkleTree, RecordBatch,
-                                plan_shard_bounds)
+from repro.chain.ledger import (DeltaCommit, Ledger, MerkleTree, RecordBatch,
+                                gathered_leaf_digests, plan_shard_bounds)
 
 
 class ContractError(RuntimeError):
@@ -72,13 +88,17 @@ class ContractError(RuntimeError):
 
 
 # GIL economics of parallel settlement: a leaf hash releases the GIL only
-# for the duration of its (leaf-sized) update, so with small leaves the
-# release/acquire handoff dominates and concurrent shard hashing *convoys*
-# — measurably slower than serial. Fan shards out to the worker pool only
-# when each chunk leaf is big enough to amortize the handoff (measured
-# crossover ~32 KiB on a 2-core host); below that the sharded commit still
-# runs (same bytes, same root), just on the calling thread.
-MIN_PARALLEL_LEAF_BYTES = 32_768
+# for updates of >= 2048 bytes (CPython's HASHLIB_GIL_MINSIZE — below that
+# pure-CPython parallel hashing is architecturally impossible), and each
+# release/acquire handoff costs more than a small leaf's hash. The framed
+# batched hasher (``chain.ledger.batch_leaf_digests``) issues exactly one
+# C call per leaf, halving the handoffs of the old two-``update`` path and
+# dropping the measured pooled-fanout crossover from ~32 KiB to ~4 KiB per
+# leaf on a 2-core host. Below the gate the sharded commit still runs
+# (same bytes, same root), just on the calling thread. Env-overridable
+# fallback for unusual hosts: SDFLB_MIN_PARALLEL_LEAF_BYTES.
+MIN_PARALLEL_LEAF_BYTES = int(
+    os.environ.get("SDFLB_MIN_PARALLEL_LEAF_BYTES", 4096))
 
 
 _RECORD_DTYPE = np.dtype([("round", "<i8"), ("worker", "<i8"),
@@ -122,7 +142,9 @@ class ShardSettlement:
     penalties: np.ndarray          # (stop-start,) Pen(w), stake-capped
     stake_after: np.ndarray        # (stop-start,) post-penalty stakes
     records: RecordBatch           # canonical encodings of this slice
-    tree: MerkleTree               # chunked Merkle subtree over the slice
+    tree: Optional[MerkleTree]     # chunked Merkle subtree over the slice
+    #                                (None on the sparse path — the delta
+    #                                commit re-hashes dirty chunks instead)
 
 
 @dataclass
@@ -134,18 +156,25 @@ class RoundPrep:
     ids: np.ndarray                # participating worker ids, id order
     scores: np.ndarray             # aligned scores, float64
     thunks: List[Callable[[], ShardSettlement]] = field(default_factory=list)
+    sparse: bool = False           # settle as a delta commit
+    # permutation s.t. ids == original_ids[order] when sparse settlement
+    # had to sort the caller's ids into canonical record order (None when
+    # they already were); penalties are unpermuted back before returning
+    order: Optional[np.ndarray] = None
 
 
 @dataclass
 class RoundSeal:
     """The deterministic merge's output — everything a block needs from
-    one task's round: drained transactions, per-shard commit parts, and
-    the penalty vector. State has already transitioned when this exists."""
+    one task's round: drained transactions, per-shard commit parts (dense
+    path) or the prebuilt incremental commit (sparse path), and the
+    penalty vector. State has already transitioned when this exists."""
     txs: List[dict]
     shards: List[RecordBatch]
     trees: List[MerkleTree]
     chunk_size: int
     penalties: np.ndarray
+    delta: Optional[DeltaCommit] = None
 
 
 class WorkerAccount:
@@ -235,6 +264,8 @@ class TrustContract:
                  trust_threshold: float, top_k: int,
                  merkle_chunk_size: int = 64,
                  settlement_shards: int = 1,
+                 sparse_settlement: bool = False,
+                 sparse_rebase_every: int = 0,
                  task_id: Optional[str] = None) -> None:
         if requester_deposit <= 0:
             raise ContractError("deployment requires a positive deposit")
@@ -242,6 +273,8 @@ class TrustContract:
             raise ContractError("merkle_chunk_size must be >= 1")
         if settlement_shards < 1:
             raise ContractError("settlement_shards must be >= 1")
+        if sparse_rebase_every < 0:
+            raise ContractError("sparse_rebase_every must be >= 0")
         self.ledger = ledger
         self.task_id = task_id         # name on a multi-tenant chain node
         self.F = worker_stake
@@ -250,7 +283,17 @@ class TrustContract:
         self.k = top_k
         self.merkle_chunk_size = merkle_chunk_size
         self.settlement_shards = settlement_shards
+        self.sparse_settlement = bool(sparse_settlement)
+        self.sparse_rebase_every = int(sparse_rebase_every)
         self.min_parallel_leaf_bytes = MIN_PARALLEL_LEAF_BYTES
+        # sparse-path state: the persistent full-population record buffer
+        # (every worker's latest settlement record, genesis rows for the
+        # never-settled), the chain's latest commit to overlay against,
+        # and the delta depth since the last dense anchor
+        self._pop_records: Optional[np.ndarray] = None
+        self._last_commit: Optional[DeltaCommit] = None
+        self._rounds_since_base = 0
+        self._round_full_cover: Dict[int, bool] = {}
         self.reward_pool = requester_deposit
         self.requester_balance = 0.0
         # struct-of-arrays account state (amortized-doubling capacity)
@@ -358,13 +401,17 @@ class TrustContract:
         return self.settlement_shards > 1 and self.parallel_leaf_ok()
 
     def settle_shard(self, round_index: int, ids: np.ndarray, s: np.ndarray,
-                     start: int, stop: int) -> ShardSettlement:
+                     start: int, stop: int,
+                     build_tree: bool = True) -> ShardSettlement:
         """Compute one contract shard's slice [start, stop) of a round —
         BadWorkers mask, stake-capped penalties, canonical records, chunked
         Merkle subtree — reading the struct-of-arrays state but mutating
         nothing, so shards of one round run concurrently on a settler pool
         (their id slices are disjoint, and the merge applies all mutations
-        afterwards on one thread)."""
+        afterwards on one thread). The sparse path passes
+        ``build_tree=False``: the slice's records become the *changed set*
+        of a delta commit, whose incremental update replaces the per-slice
+        subtree."""
         sl_ids = ids[start:stop]
         sl_s = s[start:stop]
         bad = sl_s < self.T                               # BadWorkers
@@ -375,7 +422,8 @@ class TrustContract:
         records = encode_settlement_records(round_index, sl_ids, sl_s, pen,
                                             stake_after)
         return ShardSettlement(start, stop, pen, stake_after, records,
-                               MerkleTree(records, self.merkle_chunk_size))
+                               MerkleTree(records, self.merkle_chunk_size)
+                               if build_tree else None)
 
     def prepare_round_batch(self, round_index: int, scores: np.ndarray,
                             worker_ids: Optional[np.ndarray] = None,
@@ -406,6 +454,23 @@ class TrustContract:
                     f"scores from non-participants: {set(bad.tolist())}")
             if len(np.unique(ids)) != len(ids):
                 raise ContractError("duplicate worker ids in settlement")
+        if self.sparse_settlement:
+            # canonical record order is id order (record index == worker
+            # id in the population commit); remember the permutation so
+            # penalties return aligned with the caller's score order
+            order = None
+            if worker_ids is not None and len(ids) > 1 \
+                    and (np.diff(ids) < 0).any():
+                order = np.argsort(ids, kind="stable")
+                ids, s = ids[order], s[order]
+            # one slice: the delta commit replaces the per-shard subtrees,
+            # so there is no per-slice tree to fan out
+            bounds = [0, len(ids)] if len(ids) else [0]
+            thunks = [lambda a=a, b=b: self.settle_shard(
+                round_index, ids, s, a, b, build_tree=False)
+                for a, b in zip(bounds, bounds[1:])]
+            return RoundPrep(round_index, ids, s, thunks, sparse=True,
+                             order=order)
         bounds = self.shard_bounds(len(ids), shards)
         thunks = [lambda a=a, b=b: self.settle_shard(round_index, ids, s,
                                                      a, b)
@@ -451,9 +516,74 @@ class TrustContract:
         if model_cid:
             txs.append({"type": "model", "round": round_index,
                         "cid": model_cid})
+        if prep.sparse:
+            self._round_full_cover[round_index] = True
+            delta = self._sparse_commit(round_index, ids, results)
+            pen_out = pen
+            if prep.order is not None:      # back to the caller's order
+                pen_out = np.empty_like(pen)
+                pen_out[prep.order] = pen
+            return RoundSeal(txs, [], [], self.merkle_chunk_size, pen_out,
+                             delta=delta)
         return RoundSeal(txs, [r.records for r in results],
                          [r.tree for r in results],
                          self.merkle_chunk_size, pen)
+
+    def _sparse_commit(self, round_index: int, ids: np.ndarray,
+                       results: List[ShardSettlement]
+                       ) -> Optional[DeltaCommit]:
+        """Fold this round's changed records into the persistent
+        full-population buffer and commit: a dense anchor
+        (``DeltaCommit.full``) on the first round, after enrollment grew
+        the population, at full participation, or every
+        ``sparse_rebase_every`` rounds — an incremental
+        ``DeltaCommit.delta`` (dirty chunks re-hashed from the population
+        buffer in one batched pass, O(C·log(W/k)) interior updates)
+        otherwise."""
+        W = self.num_workers
+        if W == 0:
+            return None
+        k = self.merkle_chunk_size
+        itemsize = _RECORD_DTYPE.itemsize
+        rebase = False
+        if self._pop_records is None or len(self._pop_records) != W:
+            # (re)build the population buffer: genesis rows (round -1,
+            # zero score/penalty, current stake) for workers without a
+            # settlement record in the buffer's lifetime
+            pop = np.empty(W, dtype=_RECORD_DTYPE)
+            pop["round"] = -1
+            pop["worker"] = np.arange(W)
+            pop["score"] = 0.0
+            pop["penalty"] = 0.0
+            pop["stake_after"] = self.stake
+            self._pop_records = pop
+            rebase = True
+        pop = self._pop_records
+        if results:
+            new_rows = np.concatenate(
+                [np.frombuffer(r.records.buf, _RECORD_DTYPE)
+                 for r in results])
+        else:
+            new_rows = np.empty(0, dtype=_RECORD_DTYPE)
+        pop[ids] = new_rows                 # scatter this round's records
+        self._rounds_since_base += 1
+        if (self._last_commit is None or rebase or len(ids) == W
+                or (self.sparse_rebase_every
+                    and self._rounds_since_base >= self.sparse_rebase_every)):
+            snap = pop.copy()               # the anchor owns its snapshot
+            commit = DeltaCommit.full(
+                RecordBatch(memoryview(snap).cast("B"), itemsize), k)
+            self._rounds_since_base = 0
+        else:
+            digests = gathered_leaf_digests(
+                RecordBatch(memoryview(pop).cast("B"), itemsize), k,
+                np.unique(ids // k))
+            commit = DeltaCommit.delta(
+                self._last_commit, ids.copy(),
+                RecordBatch(memoryview(new_rows).cast("B"), itemsize),
+                leaf_digests=digests)
+        self._last_commit = commit
+        return commit
 
     def note_block(self, round_index: int, ids: np.ndarray,
                    block_index: int) -> None:
@@ -493,6 +623,7 @@ class TrustContract:
             seal.txs, timestamp=timestamp,
             record_shards=seal.shards or None,
             shard_trees=seal.trees or None,
+            record_delta=seal.delta,
             chunk_size=seal.chunk_size, task_id=self.task_id)
         self.note_block(round_index, prep.ids, blk.index)
         return seal.penalties
@@ -567,12 +698,19 @@ class TrustContract:
         record's chunk (the k records sharing its Merkle leaf, ``offset``
         locating the record within it) plus the node path to the block
         root — chunk-in-shard, shard-in-task, and (on multi-task blocks)
-        task-in-block levels concatenated."""
+        task-in-block levels concatenated. Dense rounds commit only the
+        participating records (the record's position is its rank among
+        the round's ids); sparse (delta) rounds commit the *full
+        population*, record index == worker id — so idle workers are
+        provable in every delta block too."""
         wid = worker if isinstance(worker, (int, np.integer)) \
             else self._index[worker]
         block_index = self._round_blocks[round_index]
-        ids = self._round_ids[round_index]
-        pos = int(np.nonzero(ids == wid)[0][0])
+        if self._round_full_cover.get(round_index):
+            pos = int(wid)
+        else:
+            ids = self._round_ids[round_index]
+            pos = int(np.nonzero(ids == wid)[0][0])
         chunk, offset = self.ledger.record_chunk(block_index, pos,
                                                  task_id=self.task_id)
         return {"block_index": block_index, "leaf_index": pos,

@@ -61,6 +61,25 @@ def _unpack_leaves(blob: bytes):
     return out, payload["treedef"]
 
 
+class QuotaExceeded(RuntimeError):
+    """A put would push its owner past the store's per-owner byte quota.
+
+    Carries ``owner``, the owner's current logical ``used`` bytes, the
+    rejected blob's ``requested`` size, and the configured ``quota``. The
+    put is rejected atomically — no store state (global or per-owner
+    accounting) changes."""
+
+    def __init__(self, owner: str, used: int, requested: int,
+                 quota: int) -> None:
+        super().__init__(
+            f"owner {owner!r} quota exceeded: {used} + {requested} bytes "
+            f"> quota {quota}")
+        self.owner = owner
+        self.used = used
+        self.requested = requested
+        self.quota = quota
+
+
 class IPFSStore:
     """In-process content-addressed store with hash-verified retrieval.
 
@@ -69,10 +88,19 @@ class IPFSStore:
     per-owner put counts and logical bytes. Content addressing dedups
     across owners — two tasks publishing an identical tree store one blob
     (counted in ``dedup_hits``) while each owner's logical usage is still
-    attributed."""
+    attributed.
 
-    def __init__(self) -> None:
+    ``owner_quota_bytes`` (0 = unlimited) enforces a per-owner cap on
+    *logical* bytes — dedup'd puts still count against their owner, so one
+    tenant cannot ride another tenant's identical blobs to unlimited
+    attribution. An over-quota put raises ``QuotaExceeded`` before any
+    state changes; anonymous (ownerless) puts are never quota'd."""
+
+    def __init__(self, owner_quota_bytes: int = 0) -> None:
+        if owner_quota_bytes < 0:
+            raise ValueError("owner_quota_bytes must be >= 0")
         self._store: Dict[str, bytes] = {}
+        self.owner_quota_bytes = owner_quota_bytes
         self.bytes_stored = 0
         self.puts = 0
         self.gets = 0
@@ -83,6 +111,11 @@ class IPFSStore:
     def put_tree(self, tree: Any, owner: str = None) -> str:
         blob = _pack_tree(tree)
         cid = hashlib.sha256(blob).hexdigest()
+        if owner is not None and self.owner_quota_bytes:
+            used = self.bytes_by_owner.get(owner, 0)
+            if used + len(blob) > self.owner_quota_bytes:
+                raise QuotaExceeded(owner, used, len(blob),
+                                    self.owner_quota_bytes)
         if cid not in self._store:
             self._store[cid] = blob
             self.bytes_stored += len(blob)

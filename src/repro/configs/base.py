@@ -192,6 +192,27 @@ class FederationConfig:
                                             # ChainNode the pool is shared:
                                             # node-level sizing takes the max
                                             # shard count across tasks
+    sparse_settlement: bool = False         # settle rounds as incremental
+                                            # DeltaCommits over the full
+                                            # population: only the round's
+                                            # changed records (the workers
+                                            # that participated, per the
+                                            # participation mask) re-hash —
+                                            # O(C·log(W/k)) per round instead
+                                            # of O(W/k) — while every block
+                                            # still commits (and proves) all
+                                            # W workers' latest records. The
+                                            # million-worker mode; block
+                                            # hashes differ from the dense
+                                            # path (full-population root)
+    sparse_rebase_every: int = 0            # re-anchor the delta chain with a
+                                            # dense full-population commit
+                                            # every N sparse rounds (0 = only
+                                            # when forced: first round, after
+                                            # enrollment growth, or full
+                                            # participation). Bounds deep-
+                                            # verify replay depth and the
+                                            # overlay-chain walk of audits
 
 
 @dataclass(frozen=True)

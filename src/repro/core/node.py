@@ -382,11 +382,15 @@ def settle_tasks_block(ledger: Ledger, work: List[TaskRoundWork],
             seal.txs, timestamp=timestamp,
             record_shards=seal.shards or None,
             shard_trees=seal.trees or None,
+            record_delta=seal.delta,
             chunk_size=seal.chunk_size, task_id=tid)
     else:
         txs = [{**tx, "task": tid}
                for tid, seal in seals.items() for tx in seal.txs]
-        commits = {tid: Ledger._build_commit(None, seal.shards or None,
+        # a sparse task contributes its prebuilt incremental commit;
+        # dense co-tenants build theirs from the shard parts as before
+        commits = {tid: seal.delta if seal.delta is not None
+                   else Ledger._build_commit(None, seal.shards or None,
                                              seal.trees or None,
                                              seal.chunk_size)
                    for tid, seal in seals.items()}
@@ -673,6 +677,8 @@ class FederatedTask:
                 trust_threshold=fed.trust_threshold, top_k=fed.top_k_rewarded,
                 merkle_chunk_size=fed.merkle_chunk_size,
                 settlement_shards=fed.settlement_shards,
+                sparse_settlement=fed.sparse_settlement,
+                sparse_rebase_every=fed.sparse_rebase_every,
                 task_id=task_id)
             self.contract.join_batch(self.W)   # integer ids, one batch tx
             self.exchange = ClusterExchange(node.ipfs, node.ledger,
@@ -810,8 +816,16 @@ class FederatedTask:
         (if any) is sealed."""
         if self.use_blockchain:
             p.record.model_cid = model_cid
-            p.record.penalties = penalties
             bad = p.scores < self.contract.T
+            if penalties is not None and len(penalties) != self.W:
+                # sparse round: scatter the participants' penalties back
+                # into a (W,) vector; idle workers owe nothing this round
+                mask = np.asarray(p.record.participation).astype(bool)
+                full = np.zeros(self.W, np.float64)
+                full[mask] = penalties
+                penalties = full
+                bad &= mask            # idle workers were not judged
+            p.record.penalties = penalties
         else:
             bad = np.zeros(self.W, bool)
         self.reputation.update(p.scores, penalized=bad)
@@ -862,12 +876,18 @@ class ChainNode:
 
     def __init__(self, *, use_blockchain: bool = True,
                  pipeline_depth: int = 2,
-                 settler_pool_size: int = 0) -> None:
+                 settler_pool_size: int = 0,
+                 ipfs_owner_quota_bytes: int = 0) -> None:
         self.use_blockchain = use_blockchain
         self.pipeline_depth = pipeline_depth
         self.settler_pool_size = settler_pool_size
         self.ledger = Ledger() if use_blockchain else None
-        self.ipfs = IPFSStore() if use_blockchain else None
+        # per-owner (task) byte quota on the shared artifact store: a
+        # tenant publishing past it fails its own rounds (QuotaExceeded
+        # surfaces as that task's TaskSettlementError) without touching
+        # co-tenants — the storage half of multi-tenant fairness
+        self.ipfs = IPFSStore(owner_quota_bytes=ipfs_owner_quota_bytes) \
+            if use_blockchain else None
         self.tasks: Dict[str, FederatedTask] = {}
         self._tick = 0
         self._pending: Optional[_TickPending] = None
@@ -1020,8 +1040,17 @@ class ChainNode:
                 outcomes.append((tid, ridx, None, e))
                 continue
             live.append((task, p, t0))
-            work.append(TaskRoundWork(tid, task.contract, ridx, p.scores,
-                                      cid))
+            scores, wids = p.scores, None
+            if task.contract.sparse_settlement \
+                    and p.record.participation is not None:
+                # sparse settlement: the round's *changed set* is the
+                # participating workers — idle workers' records carry
+                # over into the delta commit unhashed
+                mask = np.asarray(p.record.participation).astype(bool)
+                wids = np.nonzero(mask)[0].astype(np.int64)
+                scores = p.scores[wids]
+            work.append(TaskRoundWork(tid, task.contract, ridx, scores,
+                                      cid, worker_ids=wids))
         if work:
             # logical timestamp: every node (and the serial reference
             # driver) seals byte-identical blocks for the same tick

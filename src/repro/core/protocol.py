@@ -35,6 +35,14 @@ settled once ``run_round(r)`` returns whenever head rotation consumes
 chain heads. Settler exceptions re-raise on the training thread at the
 next ``run_round``/``flush`` (now as ``TaskSettlementError``, naming the
 task and the failing round).
+
+Sparse settlement rides the same API: with ``fed.sparse_settlement`` the
+``participation`` mask passed to ``run_round`` doubles as the round's
+settlement *changed set* — only participating workers' records re-hash
+into the block's delta commit (see ``chain.contract``), while every block
+still commits and proves the full population. ``ipfs_owner_quota_bytes``
+caps this task's logical bytes on the artifact store (``QuotaExceeded``
+surfaces as a ``TaskSettlementError``).
 """
 from __future__ import annotations
 
@@ -62,10 +70,12 @@ class SDFLBProtocol:
                  tc: TrainConfig, *, use_blockchain: bool = True,
                  seed: int = 0,
                  adversary=None,
-                 reputation_leaders: bool = False) -> None:
+                 reputation_leaders: bool = False,
+                 ipfs_owner_quota_bytes: int = 0) -> None:
         self._node = ChainNode(use_blockchain=use_blockchain,
                                pipeline_depth=fed.pipeline_depth,
-                               settler_pool_size=fed.settler_pool_size)
+                               settler_pool_size=fed.settler_pool_size,
+                               ipfs_owner_quota_bytes=ipfs_owner_quota_bytes)
         self._task = self._node.create_task(
             fed.task_id, cfg, fed, tc, seed=seed, adversary=adversary,
             reputation_leaders=reputation_leaders)

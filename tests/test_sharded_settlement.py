@@ -210,6 +210,8 @@ def test_pool_spawn_gated_on_fanout_feasibility():
     from repro.configs.registry import get_config
     from repro.configs.base import FederationConfig, TrainConfig
 
+    import os
+
     cfg = get_config("paper-net")
     tc = TrainConfig(remat=False)
     base = FederationConfig(num_clusters=1, workers_per_cluster=4,
@@ -218,11 +220,21 @@ def test_pool_spawn_gated_on_fanout_feasibility():
     p1 = SDFLBProtocol(cfg, base, tc, use_blockchain=True, seed=0)
     assert p1._shard_pool is None
     assert not p1.contract.parallel_fanout_possible()
-    # big leaves clear the gate: auto sizing spawns workers
+    # big leaves clear the gate: auto sizing spawns workers (auto size is
+    # min(shards, cpus) — on a single-CPU host it stays 1 and nothing
+    # spawns, so only assert the spawn where it can happen)
     p2 = SDFLBProtocol(cfg, dc.replace(base, merkle_chunk_size=1024), tc,
                        use_blockchain=True, seed=0)
-    assert p2._shard_pool is not None
     assert p2.contract.parallel_fanout_possible()
+    if (os.cpu_count() or 1) > 1:
+        assert p2._shard_pool is not None
+    # retuned gate: the framed batched hasher amortizes the GIL handoff
+    # from ~4 KiB leaves, so k=128 (5 KiB) clears a gate the old 32 KiB
+    # crossover kept shut
+    c128 = TrustContract(Ledger(), requester_deposit=1e3, worker_stake=10.0,
+                         penalty_pct=50.0, trust_threshold=0.5, top_k=3,
+                         merkle_chunk_size=128, settlement_shards=4)
+    assert c128.parallel_fanout_possible()
     # explicit pool size forces the spawn even under the gate
     p3 = SDFLBProtocol(cfg, dc.replace(base, settler_pool_size=2), tc,
                        use_blockchain=True, seed=0)
