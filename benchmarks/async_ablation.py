@@ -1,55 +1,100 @@
 """Asynchronous functionality ablation (paper §VI.C, quantified).
 
-Heterogeneous worker speeds (25% stragglers, 4-8x slower). Compare:
-  sync  : every round waits for the slowest worker
-  async : aggregate as soon as `buffer_size` updates arrive, staleness-
-          discounted (core.async_agg) — the paper's asynchronous mode.
-Measures simulated wall-clock to reach a loss target + failure resilience."""
+Heterogeneous worker speeds (25% stragglers, 4-8x slower) under churn
+(``failure_prob`` of any finished update being lost). Compare:
+  sync  : every round waits for the slowest worker — and under churn, for
+          that worker's retry after a lost update
+  async : event-driven node (``run_events``) — aggregate as soon as
+          ``buffer_size`` updates arrive, staleness-discounted cohorts
+          sealed per event (the paper's asynchronous mode).
+Reports per-update settlement latency (simulated seal time − arrival time)
+at p50/p95/p99 and simulated time-to-target-loss; the node-level churn rows
+feed the fig4 reliability table (``fig4_reliability.run_churn`` reuses this
+profile)."""
 from __future__ import annotations
 
+import numpy as np
 
 from benchmarks.common import csv_row, paper_protocol
 from repro.core import async_sim
 from repro.data.datasets import make_federated_mnist
 
 
-def run(rounds: int = 40, samples: int = 4096, W: int = 8, seed: int = 0,
-        slowdown: float = 6.0):
-    profiles = async_sim.heterogeneous_profiles(
-        W, straggler_frac=0.25, straggler_slowdown=slowdown, seed=seed)
+def _pcts(lat) -> dict:
+    lat = np.asarray(lat, np.float64)
+    return {f"p{p}": float(np.percentile(lat, p)) for p in (50, 95, 99)}
 
-    # --- sync: logical round time = slowest worker ---
+
+def run(rounds: int = 40, samples: int = 4096, W: int = 8, seed: int = 0,
+        slowdown: float = 6.0, failure_prob: float = 0.1,
+        target_loss: float = 2.15):
+    profiles = async_sim.heterogeneous_profiles(
+        W, straggler_frac=0.25, straggler_slowdown=slowdown,
+        failure_prob=failure_prob, seed=seed)
+    eval_every = 5
+
+    # --- sync: each logical round barriers on the slowest worker (under
+    # churn, on its retry after a lost update) ---
     ds = make_federated_mnist(W, samples=samples, seed=seed)
-    sync_proto = paper_protocol(W, clusters=2, seed=seed)
-    sync_sched = async_sim.AsyncScheduler(profiles, seed=seed, buffer_size=W)
-    sync_clock, sync_curve = 0.0, []
     ev = ds.eval_batch(512)
+    sync_proto = paper_protocol(W, clusters=2, seed=seed)
+    barrier = async_sim.AsyncScheduler(profiles, seed=seed, buffer_size=W)
+    sync_lat, sync_curve, t_target_sync = [], [], None
     for r in range(rounds):
-        sync_clock += sync_sched.sync_round_time()
+        t, mask, _ = barrier.next_aggregation()
+        sync_lat.extend((t - barrier.arrival_times()[mask > 0]).tolist())
         sync_proto.run_round(ds.round_batches(32))
-        if (r + 1) % 10 == 0 or r == rounds - 1:
-            sync_curve.append((sync_clock, sync_proto.evaluate(ev)["loss"]))
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            loss = sync_proto.evaluate(ev)["loss"]
+            sync_curve.append((t, loss))
+            if t_target_sync is None and loss <= target_loss:
+                t_target_sync = t
     sync_proto.finalize()
 
-    # --- async: buffer of W//2, staleness-weighted ---
+    # --- async: event-driven node, buffer of W//2, staleness-weighted ---
     ds = make_federated_mnist(W, samples=samples, seed=seed)
-    async_proto = paper_protocol(W, clusters=2, seed=seed, async_mode=True)
-    sched = async_sim.AsyncScheduler(profiles, seed=seed, buffer_size=W // 2)
-    async_curve = []
-    for r in range(rounds):
-        t, mask, _ = sched.next_aggregation()
-        async_proto.run_round(ds.round_batches(32), participation=mask)
-        if (r + 1) % 10 == 0 or r == rounds - 1:
-            async_curve.append((t, async_proto.evaluate(ev)["loss"]))
+    async_proto = paper_protocol(W, clusters=2, seed=seed, async_mode=True,
+                                 arrival_profiles=profiles,
+                                 buffer_size=W // 2)
+    async_lat, async_curve, t_target_async = [], [], None
+    done = 0
+    while done < rounds:
+        recs = async_proto.run_events(lambda r: ds.round_batches(32),
+                                      events=1)
+        if not recs:
+            continue                       # empty cohort: churn ate the window
+        rec = recs[0]
+        done += 1
+        cohort = rec.participation > 0
+        async_lat.extend((rec.sim_time - rec.arrival_times[cohort]).tolist())
+        if done % eval_every == 0 or done == rounds:
+            loss = async_proto.evaluate(ev)["loss"]
+            async_curve.append((rec.sim_time, loss))
+            if t_target_async is None and loss <= target_loss:
+                t_target_async = rec.sim_time
     async_proto.finalize()
 
+    sp, ap = _pcts(sync_lat), _pcts(async_lat)
     t_sync, l_sync = sync_curve[-1]
     t_async, l_async = async_curve[-1]
     csv_row("async_sync_simclock", t_sync * 1e6, f"loss={l_sync:.3f}")
     csv_row("async_async_simclock", t_async * 1e6, f"loss={l_async:.3f}")
+    for name, p in (("sync", sp), ("async", ap)):
+        csv_row(f"async_{name}_latency_p95", p["p95"] * 1e6,
+                f"p50={p['p50']:.2f}s p99={p['p99']:.2f}s")
     csv_row("async_speedup", 0.0, f"{t_sync / t_async:.2f}x per round-budget")
+    csv_row("async_time_to_target", 0.0,
+            f"target={target_loss} sync={t_target_sync} async={t_target_async}")
     assert t_async < t_sync, "async rounds must beat slowest-worker barrier"
-    return {"sync": sync_curve, "async": async_curve}
+    assert ap["p95"] < sp["p95"], \
+        "event-driven p95 settlement latency must beat the sync barrier"
+    if t_target_sync is not None:
+        assert t_target_async is not None and t_target_async <= t_target_sync, \
+            "async must reach the loss target no later (simulated time)"
+    return {"sync": sync_curve, "async": async_curve,
+            "latency": {"sync": sp, "async": ap},
+            "time_to_target": {"sync": t_target_sync,
+                               "async": t_target_async}}
 
 
 if __name__ == "__main__":

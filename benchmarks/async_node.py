@@ -1,0 +1,190 @@
+"""Event-driven node settlement at scale — the async-first ChainNode
+headline (``BENCH_async_node.json``, CI-gated).
+
+Chain-only (no jitted learning): drives the arrival frontier + contract
+layers exactly as ``ChainNode.run_events`` does, at worker counts where the
+learning step would dwarf the signal.
+
+Part A — simulated-time tail latency (deterministic, runner-noise-immune).
+Heavy-tailed (Pareto) worker speeds with dropout. An update's settlement
+latency is seal time − arrival time. The sync barrier (lockstep rounds)
+makes every update wait for the slowest worker's (retried) arrival; the
+event-driven path seals a cohort of ``buffer_size`` as soon as it fills.
+Gate: async p95 (and p99) beat the sync barrier's.
+
+Part B — wall-clock settlement cost. The sync path settles the full
+population densely; the event path seals sparse cohort DeltaCommits with
+staleness recorded per on-chain record. Gates: (1) sealing one cohort
+event never costs more than ``event_seal_ratio`` of a dense
+full-population round (so event-driven settlement can run many events per
+round-time without blowing the chain budget); (2) the dense sync path —
+byte-identical to the pre-async contract — stays under an absolute
+per-record budget; (3) the sealed overlay chain deep-verifies with every
+idle worker still proof-covered. The per-changed-record ratio is reported
+(not gated): at small cohorts the fixed per-block seal dominates it.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_json, csv_row
+from repro.chain.contract import TrustContract
+from repro.chain.ledger import Ledger
+from repro.core import async_sim
+from repro.core.async_sim import AsyncScheduler
+
+
+def _pcts(lat) -> dict:
+    lat = np.asarray(lat, np.float64)
+    return {f"p{p}": float(np.percentile(lat, p)) for p in (50, 95, 99)}
+
+
+def _sync_barrier_latencies(profiles, rounds: int, seed: int) -> np.ndarray:
+    """Lockstep sync baseline, vectorized: each round every worker starts at
+    the barrier, trains, retries on a lost update (geometric attempts), and
+    the round seals at the slowest worker's surviving arrival. Latency per
+    update = barrier − its own arrival. (The event scheduler would model
+    this too via buffer_size=W, but free-running fast workers re-arrive
+    thousands of times under a Pareto tail — the lockstep form is the same
+    distribution without the heap churn.)"""
+    speed = np.array([p.speed for p in profiles])
+    jitter = np.array([p.jitter for p in profiles])
+    fail = np.array([p.failure_prob for p in profiles])
+    rng = np.random.default_rng((seed, 1))
+    lats = []
+    for _ in range(rounds):
+        attempts = rng.geometric(1.0 - fail)
+        arrival = np.zeros(len(profiles))
+        for a in range(int(attempts.max())):
+            live = attempts > a
+            arrival[live] += speed[live] * rng.lognormal(0.0, jitter[live])
+        lats.append(arrival.max() - arrival)
+    return np.concatenate(lats)
+
+
+def _contract(W: int, *, sparse: bool, alpha: float = 0.5) -> TrustContract:
+    c = TrustContract(Ledger(), requester_deposit=1e6, worker_stake=10.0,
+                      penalty_pct=50.0, trust_threshold=0.5,
+                      top_k=max(W // 100, 1), merkle_chunk_size=64,
+                      sparse_settlement=sparse,
+                      staleness_alpha=alpha if sparse else 0.0)
+    c.join_batch(W)
+    return c
+
+
+def run(W: int = 100_000, sync_rounds: int = 4, async_events: int = 400,
+        chain_events: int = 8, buffer_frac: int = 16, seed: int = 0,
+        failure_prob: float = 0.05, event_seal_ratio: float = 1.5,
+        per_record_budget_us: float = 5.0, wall_gates: bool = True,
+        json_name: str = "async_node"):
+    profiles = async_sim.heavy_tailed_profiles(
+        W, shape=1.5, jitter=0.3, failure_prob=failure_prob, seed=seed)
+    B = max(W // buffer_frac, 1)
+    rng = np.random.default_rng(seed)
+
+    # -- Part A: simulated-time settlement latency ---------------------------
+    sync_lat = _sync_barrier_latencies(profiles, sync_rounds, seed)
+
+    sched = AsyncScheduler(profiles, seed=seed, buffer_size=B)
+    async_lat, cohort_sizes, max_staleness = [], [], 0
+    for _ in range(async_events):
+        t, mask, snap = sched.next_aggregation()
+        cohort = mask > 0
+        async_lat.append(t - sched.arrival_times()[cohort])
+        cohort_sizes.append(int(cohort.sum()))
+        max_staleness = max(max_staleness, int(snap.max()))
+    async_lat = np.concatenate(async_lat)
+
+    sp, ap = _pcts(sync_lat), _pcts(async_lat)
+    csv_row(f"async_node_sync_latency_w{W}", sp["p95"] * 1e6,
+            f"p50={sp['p50']:.2f}s p99={sp['p99']:.2f}s "
+            f"updates={len(sync_lat)}")
+    csv_row(f"async_node_event_latency_w{W}", ap["p95"] * 1e6,
+            f"p50={ap['p50']:.2f}s p99={ap['p99']:.2f}s "
+            f"buffer={B} mean_cohort={np.mean(cohort_sizes):.0f} "
+            f"max_staleness={max_staleness}")
+    assert ap["p95"] < sp["p95"] and ap["p99"] < sp["p99"], \
+        "event-driven settlement tail latency must beat the sync barrier"
+
+    # -- Part B: wall-clock settlement cost ----------------------------------
+    # sync baseline: dense full-population settlement (byte-identical to the
+    # pre-async contract — staleness_alpha=0, no staleness argument)
+    dense = _contract(W, sparse=False)
+    dense_times = []
+    for r in range(max(sync_rounds, 3)):
+        scores = rng.random(W)
+        t0 = time.monotonic()
+        dense.settle_round_batch(r, scores, timestamp=float(r + 1))
+        dense_times.append(time.monotonic() - t0)
+    dense_s = float(np.median(dense_times[1:]))
+    per_record_us = dense_s / W * 1e6
+
+    # event path: sparse cohort seals with on-chain staleness, driven by the
+    # same arrival process as Part A
+    sparse = _contract(W, sparse=True)
+    sched = AsyncScheduler(profiles, seed=seed, buffer_size=B)
+    sparse_times, changed = [], 0
+    for r in range(chain_events):
+        _, mask, snap = sched.next_aggregation()
+        ids = np.nonzero(mask)[0].astype(np.int64)
+        changed += len(ids)
+        scores = rng.random(len(ids))
+        t0 = time.monotonic()
+        sparse.settle_round_batch(r, scores, worker_ids=ids,
+                                  staleness=snap[ids],
+                                  timestamp=float(r + 1))
+        sparse_times.append(time.monotonic() - t0)
+    sparse_s = float(np.median(sparse_times[1:]))
+    per_changed_us = sparse_s / (changed / chain_events) * 1e6
+
+    assert sparse.ledger.verify_chain(deep=True)
+    # an idle worker (never in any cohort) is still proof-covered
+    settled = set()
+    for r in range(chain_events):
+        settled.update(sparse._round_ids[r].tolist())
+    idle = next(w for w in range(W) if w not in settled)
+    proof = sparse.settlement_proof(chain_events - 1, idle)
+    assert sparse.verify_settlement(proof) and proof["record"]["round"] == -1
+
+    csv_row(f"async_node_dense_settle_w{W}", dense_s * 1e6,
+            f"per_record_us={per_record_us:.3f}")
+    csv_row(f"async_node_cohort_settle_w{W}", sparse_s * 1e6,
+            f"per_changed_record_us={per_changed_us:.3f} "
+            f"event/dense={sparse_s / dense_s:.2f}")
+    if wall_gates:       # correctness-only smoke runs skip the wall gates
+        assert sparse_s < event_seal_ratio * dense_s, \
+            (f"cohort event seal {sparse_s * 1e3:.2f}ms exceeds "
+             f"{event_seal_ratio}x a dense full-population round "
+             f"{dense_s * 1e3:.2f}ms")
+        assert per_record_us < per_record_budget_us, \
+            (f"dense (sync-path) settlement regressed: {per_record_us:.3f}us "
+             f"per record > {per_record_budget_us}us budget")
+
+    payload = {
+        "W": W, "buffer_size": B, "failure_prob": failure_prob,
+        "profile": "pareto(shape=1.5) heavy-tailed + dropout",
+        "sync": {"rounds": sync_rounds, "latency_sim_s": sp,
+                 "settle_s": dense_s, "per_record_us": per_record_us},
+        "async": {"events": async_events, "latency_sim_s": ap,
+                  "mean_cohort": float(np.mean(cohort_sizes)),
+                  "max_staleness": max_staleness,
+                  "chain_events": chain_events, "settle_s": sparse_s,
+                  "per_changed_record_us": per_changed_us},
+        "gates": {
+            "p95_latency_speedup": sp["p95"] / ap["p95"],
+            "p99_latency_speedup": sp["p99"] / ap["p99"],
+            "event_seal_vs_dense_round": sparse_s / dense_s,
+            "event_seal_budget": event_seal_ratio,
+            "per_record_us": per_record_us,
+            "per_record_budget_us": per_record_budget_us,
+            "per_changed_record_ratio": per_changed_us / per_record_us,
+        },
+    }
+    bench_json(json_name, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(W=10_000, sync_rounds=3, async_events=120, chain_events=6)

@@ -16,15 +16,20 @@ PAPER_TC = TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd", remat=False)
 def paper_protocol(workers: int, *, clusters: int = 1, blockchain: bool = True,
                    seed: int = 0, trust_threshold: float = 0.2,
                    adversary=None, async_mode: bool = False,
-                   penalty_pct: float = 50.0) -> SDFLBProtocol:
+                   penalty_pct: float = 50.0, arrival_profiles=None,
+                   **fed_kw) -> SDFLBProtocol:
+    """``fed_kw`` forwards extra FederationConfig knobs (buffer_size,
+    max_wait, sparse_settlement, ...); ``arrival_profiles`` plus
+    ``async_mode=True`` makes the protocol event-drivable (run_events)."""
     fed = FederationConfig(num_clusters=clusters,
                            workers_per_cluster=workers // clusters,
                            trust_threshold=trust_threshold,
                            penalty_pct=penalty_pct,
-                           async_mode=async_mode)
+                           async_mode=async_mode, **fed_kw)
     return SDFLBProtocol(get_config("paper-net"), fed, PAPER_TC,
                          use_blockchain=blockchain, seed=seed,
-                         adversary=adversary)
+                         adversary=adversary,
+                         arrival_profiles=arrival_profiles)
 
 
 def run_rounds(proto, ds, rounds: int, batch: int = 32, eval_every: int = 0,

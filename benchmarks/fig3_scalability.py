@@ -118,7 +118,8 @@ def run_sharded_settlement(worker_count: int = 100_000,
     score_mat = rng.random((rounds, W))
     pool = ShardWorkerPool(pool_size or min(max(shard_counts),
                                             os.cpu_count() or 1))
-    record_size = 40                      # _RECORD_DTYPE.itemsize
+    from repro.chain.contract import _RECORD_DTYPE
+    record_size = _RECORD_DTYPE.itemsize  # tracks the on-chain record layout
     t_settle = {}
     try:
         for k in chunk_sizes:

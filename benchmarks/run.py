@@ -17,29 +17,41 @@ def main() -> None:
                     help="reduced rounds/samples (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig3,fig4,fig56,"
-                         "trust,async,cfl,chain,kernels,roofline)")
+                         "trust,async,async_node,cfl,chain,kernels,"
+                         "roofline)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     q = args.quick
 
-    from benchmarks import (async_ablation, cfl_baseline, fig2_blockchain,
-                            fig3_scalability, fig4_reliability,
-                            fig56_convergence, kernel_bench, roofline,
-                            trust_ablation)
+    from benchmarks import (async_ablation, async_node, cfl_baseline,
+                            fig2_blockchain, fig3_scalability,
+                            fig4_reliability, fig56_convergence,
+                            kernel_bench, roofline, trust_ablation)
 
     suite = {
         "fig2": lambda: fig2_blockchain.run(
             rounds=20 if q else 60, samples=1024 if q else 2048),
         "fig3": lambda: fig3_scalability.run(
             rounds=20 if q else 60, samples=2048 if q else 4096),
-        "fig4": lambda: fig4_reliability.run(
-            rounds=16 if q else 40, samples=2048 if q else 4096),
+        "fig4": lambda: (
+            fig4_reliability.run(
+                rounds=16 if q else 40, samples=2048 if q else 4096),
+            fig4_reliability.run_churn(
+                rounds=12 if q else 24, samples=2048)),
         "fig56": lambda: fig56_convergence.run(
             rounds=60 if q else 100, samples=2048 if q else 4096),
         "trust": lambda: trust_ablation.run(
             rounds=20 if q else 50, samples=2048 if q else 4096),
         "async": lambda: async_ablation.run(
             rounds=16 if q else 40, samples=2048 if q else 4096),
+        # event-driven node headline: simulated-time settlement tail latency
+        # under a heavy-tailed straggler profile + chain-only cohort seal
+        # cost (writes the CI-gated BENCH_async_node.json)
+        "async_node": lambda: async_node.run(
+            W=10_000 if q else 100_000,
+            sync_rounds=3 if q else 4,
+            async_events=120 if q else 400,
+            chain_events=6 if q else 8),
         "cfl": lambda: cfl_baseline.run(
             rounds=25 if q else 50, samples=2048 if q else 4096),
         "kernels": kernel_bench.run,

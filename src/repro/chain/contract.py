@@ -66,6 +66,17 @@ with inherited records exactly like with fresh ones. Algorithm 1
 semantics (penalties, stakes, transfers) are unchanged — only the commit
 strategy differs.
 
+Staleness-aware settlement (``staleness_alpha`` > 0): the event-driven
+node (``core.node.ChainNode.run_events``) settles whatever cohort arrived
+at each aggregation event, and each settled record carries the update's
+*staleness* (rounds since it was computed) in the canonical record
+encoding — committed under the block's Merkle root, so the discount a
+worker received is auditable on-chain. Penalties and payout credit scale
+by ``(1+staleness)^-alpha`` (the same discount ``trust.staleness_discount``
+applies to aggregation weight): a late-but-honest update is discounted,
+not punished at full freshness weight. ``alpha=0`` — the default and the
+synchronous path — is bit-identical to staleness-unaware settlement.
+
 The legacy scalar API (``join`` / ``settle_round`` with a score dict /
 dict-like ``workers`` access) is kept as a thin wrapper over the batch
 path, so Algorithm 1 semantics are provably unchanged (see the
@@ -103,18 +114,22 @@ MIN_PARALLEL_LEAF_BYTES = int(
 
 _RECORD_DTYPE = np.dtype([("round", "<i8"), ("worker", "<i8"),
                           ("score", "<f8"), ("penalty", "<f8"),
-                          ("stake_after", "<f8")])
+                          ("stake_after", "<f8"), ("staleness", "<i8")])
 
 
 def encode_settlement_records(round_index: int, worker_ids: np.ndarray,
                               scores: np.ndarray, penalties: np.ndarray,
-                              stakes_after: np.ndarray) -> RecordBatch:
+                              stakes_after: np.ndarray,
+                              staleness: Optional[np.ndarray] = None
+                              ) -> RecordBatch:
     """Canonical fixed-width binary encoding of per-worker settlement
     records — the Merkle-committed data of a settlement block. Built
     vectorized into one contiguous buffer; the returned ``RecordBatch``
     wraps a memoryview straight onto the array's memory (no ``tobytes``
     copy — the commit hashes leaves out of the buffer zero-copy) and
-    indexes like a list of per-record bytes."""
+    indexes like a list of per-record bytes. ``staleness`` (rounds since
+    the worker's update was computed, 0 = fresh) defaults to zeros — the
+    synchronous path."""
     n = len(worker_ids)
     rec = np.empty(n, dtype=_RECORD_DTYPE)
     rec["round"] = round_index
@@ -122,6 +137,7 @@ def encode_settlement_records(round_index: int, worker_ids: np.ndarray,
     rec["score"] = scores
     rec["penalty"] = penalties
     rec["stake_after"] = stakes_after
+    rec["staleness"] = 0 if staleness is None else staleness
     return RecordBatch(memoryview(rec).cast("B"), _RECORD_DTYPE.itemsize)
 
 
@@ -129,7 +145,8 @@ def decode_settlement_record(leaf: bytes) -> Dict[str, float]:
     rec = np.frombuffer(leaf, dtype=_RECORD_DTYPE)[0]
     return {"round": int(rec["round"]), "worker": int(rec["worker"]),
             "score": float(rec["score"]), "penalty": float(rec["penalty"]),
-            "stake_after": float(rec["stake_after"])}
+            "stake_after": float(rec["stake_after"]),
+            "staleness": int(rec["staleness"])}
 
 
 @dataclass
@@ -161,6 +178,7 @@ class RoundPrep:
     # had to sort the caller's ids into canonical record order (None when
     # they already were); penalties are unpermuted back before returning
     order: Optional[np.ndarray] = None
+    staleness: Optional[np.ndarray] = None  # aligned with ids (None = fresh)
 
 
 @dataclass
@@ -266,6 +284,7 @@ class TrustContract:
                  settlement_shards: int = 1,
                  sparse_settlement: bool = False,
                  sparse_rebase_every: int = 0,
+                 staleness_alpha: float = 0.0,
                  task_id: Optional[str] = None) -> None:
         if requester_deposit <= 0:
             raise ContractError("deployment requires a positive deposit")
@@ -275,12 +294,20 @@ class TrustContract:
             raise ContractError("settlement_shards must be >= 1")
         if sparse_rebase_every < 0:
             raise ContractError("sparse_rebase_every must be >= 0")
+        if staleness_alpha < 0:
+            raise ContractError("staleness_alpha must be >= 0")
         self.ledger = ledger
         self.task_id = task_id         # name on a multi-tenant chain node
         self.F = worker_stake
         self.P = penalty_pct
         self.T = trust_threshold
         self.k = top_k
+        # staleness-aware economics (event-driven settlement): a worker
+        # settled with staleness s has penalty and payout-credit scaled by
+        # (1+s)^-alpha — a late-but-honest update is discounted, not
+        # punished at full freshness weight. alpha=0 (the default, and the
+        # sync path) is bit-identical to staleness-unaware settlement.
+        self.staleness_alpha = float(staleness_alpha)
         self.merkle_chunk_size = merkle_chunk_size
         self.settlement_shards = settlement_shards
         self.sparse_settlement = bool(sparse_settlement)
@@ -401,8 +428,9 @@ class TrustContract:
         return self.settlement_shards > 1 and self.parallel_leaf_ok()
 
     def settle_shard(self, round_index: int, ids: np.ndarray, s: np.ndarray,
-                     start: int, stop: int,
-                     build_tree: bool = True) -> ShardSettlement:
+                     start: int, stop: int, build_tree: bool = True,
+                     staleness: Optional[np.ndarray] = None
+                     ) -> ShardSettlement:
         """Compute one contract shard's slice [start, stop) of a round —
         BadWorkers mask, stake-capped penalties, canonical records, chunked
         Merkle subtree — reading the struct-of-arrays state but mutating
@@ -411,31 +439,50 @@ class TrustContract:
         afterwards on one thread). The sparse path passes
         ``build_tree=False``: the slice's records become the *changed set*
         of a delta commit, whose incremental update replaces the per-slice
-        subtree."""
+        subtree. ``staleness`` (aligned with ``ids``) makes penalties
+        staleness-discounted and is committed in the records, so the
+        event-driven node's economics are auditable on-chain."""
         sl_ids = ids[start:stop]
         sl_s = s[start:stop]
         bad = sl_s < self.T                               # BadWorkers
         stake_sel = self.stake[sl_ids]
-        pen = np.where(bad, np.minimum(self.F * self.P / 100.0, stake_sel),
+        full_pen = self.F * self.P / 100.0
+        sl_st = None
+        if staleness is not None:
+            sl_st = staleness[start:stop]
+            if self.staleness_alpha:
+                # a stale update was honest work against an old global —
+                # penalize it at its (discounted) evidentiary weight
+                full_pen = full_pen * self._staleness_discount(sl_st)
+        pen = np.where(bad, np.minimum(full_pen, stake_sel),
                        0.0)                               # Pen(w), stake-capped
         stake_after = stake_sel - pen
         records = encode_settlement_records(round_index, sl_ids, sl_s, pen,
-                                            stake_after)
+                                            stake_after, staleness=sl_st)
         return ShardSettlement(start, stop, pen, stake_after, records,
                                MerkleTree(records, self.merkle_chunk_size)
                                if build_tree else None)
 
+    def _staleness_discount(self, staleness: np.ndarray) -> np.ndarray:
+        """(1+s)^-alpha — the same discount ``core.trust.staleness_discount``
+        applies inside the jitted round, here on the settlement side."""
+        return (1.0 + staleness.astype(np.float64)) ** (-self.staleness_alpha)
+
     def prepare_round_batch(self, round_index: int, scores: np.ndarray,
                             worker_ids: Optional[np.ndarray] = None,
-                            shards: Optional[int] = None) -> RoundPrep:
+                            shards: Optional[int] = None,
+                            staleness: Optional[np.ndarray] = None
+                            ) -> RoundPrep:
         """Phase 1 of a settlement: validate inputs and build the per-shard
         compute thunks (pure — no contract state is touched until
         ``finish_round_batch``), so a multi-tenant node can interleave many
         tasks' thunks through one shared worker pool. ``shards`` overrides
         the execution granularity (consensus-invisible: subtree-aligned
-        boundaries commit the identical root for every shard count). A
-        failure here, or in any thunk, aborts the round with nothing
-        applied and nothing committed."""
+        boundaries commit the identical root for every shard count).
+        ``staleness`` (aligned with ``scores``) is recorded on-chain and —
+        with ``staleness_alpha > 0`` — discounts penalties and payout
+        credit. A failure here, or in any thunk, aborts the round with
+        nothing applied and nothing committed."""
         if self.closed:
             raise ContractError("task closed")
         s = np.asarray(scores, np.float64).reshape(-1)
@@ -454,6 +501,13 @@ class TrustContract:
                     f"scores from non-participants: {set(bad.tolist())}")
             if len(np.unique(ids)) != len(ids):
                 raise ContractError("duplicate worker ids in settlement")
+        st = None
+        if staleness is not None:
+            st = np.asarray(staleness, np.int64).reshape(-1)
+            if len(st) != len(s):
+                raise ContractError("staleness/scores length mismatch")
+            if len(st) and st.min() < 0:
+                raise ContractError("staleness must be >= 0")
         if self.sparse_settlement:
             # canonical record order is id order (record index == worker
             # id in the population commit); remember the permutation so
@@ -463,19 +517,25 @@ class TrustContract:
                     and (np.diff(ids) < 0).any():
                 order = np.argsort(ids, kind="stable")
                 ids, s = ids[order], s[order]
+                if st is not None:
+                    st = st[order]
             # one slice: the delta commit replaces the per-shard subtrees,
             # so there is no per-slice tree to fan out
             bounds = [0, len(ids)] if len(ids) else [0]
+            kw = {} if st is None else {"staleness": st}
             thunks = [lambda a=a, b=b: self.settle_shard(
-                round_index, ids, s, a, b, build_tree=False)
+                round_index, ids, s, a, b, build_tree=False, **kw)
                 for a, b in zip(bounds, bounds[1:])]
             return RoundPrep(round_index, ids, s, thunks, sparse=True,
-                             order=order)
+                             order=order, staleness=st)
         bounds = self.shard_bounds(len(ids), shards)
+        # staleness rides as a kwarg only when present: the sync path keeps
+        # the legacy settle_shard call signature
+        kw = {} if st is None else {"staleness": st}
         thunks = [lambda a=a, b=b: self.settle_shard(round_index, ids, s,
-                                                     a, b)
+                                                     a, b, **kw)
                   for a, b in zip(bounds, bounds[1:])]
-        return RoundPrep(round_index, ids, s, thunks)
+        return RoundPrep(round_index, ids, s, thunks, staleness=st)
 
     def parallel_leaf_ok(self) -> bool:
         """The GIL gate for this contract's leaves: fan shard thunks out to
@@ -504,7 +564,12 @@ class TrustContract:
         self.stake[ids] = stake_after
         self.penalized_rounds[ids] += bad
         self.requester_balance += float(pen.sum())        # step 7
-        self.score_sum[ids] += s
+        if prep.staleness is not None and self.staleness_alpha:
+            # stale contributions earn payout credit at the same
+            # (1+s)^-alpha discount the aggregation gave their update
+            self.score_sum[ids] += s * self._staleness_discount(prep.staleness)
+        else:
+            self.score_sum[ids] += s
         self.score_count[ids] += 1
         self._score_log.append((ids, s))
 
@@ -556,6 +621,7 @@ class TrustContract:
             pop["score"] = 0.0
             pop["penalty"] = 0.0
             pop["stake_after"] = self.stake
+            pop["staleness"] = 0
             self._pop_records = pop
             rebase = True
         pop = self._pop_records
@@ -596,7 +662,9 @@ class TrustContract:
                            worker_ids: Optional[np.ndarray] = None,
                            model_cid: str = "",
                            timestamp: Optional[float] = None,
-                           pool=None) -> np.ndarray:
+                           pool=None,
+                           staleness: Optional[np.ndarray] = None
+                           ) -> np.ndarray:
         """Vectorized settlement: BadWorkers mask, stake-capped penalties,
         requester transfer, and the Merkle-committed round block — no
         per-worker Python loop. ``worker_ids`` defaults to all workers (the
@@ -609,7 +677,8 @@ class TrustContract:
         Composes prepare → shard fan-out → merge → seal over a single-task
         block, which is exactly the pre-multi-tenant settlement path.
         Returns the (len(scores),) penalty vector aligned with ``scores``."""
-        prep = self.prepare_round_batch(round_index, scores, worker_ids)
+        prep = self.prepare_round_batch(round_index, scores, worker_ids,
+                                        staleness=staleness)
         # fan the round out across contract shards (pure compute, no state
         # mutation — a shard failure aborts the round with nothing applied
         # and nothing committed)

@@ -164,7 +164,15 @@ class FederationConfig:
     # async functionality
     async_mode: bool = False
     staleness_alpha: float = 0.5            # weight = 1 / (1 + staleness)**alpha
-    buffer_size: int = 8                    # FedBuff-style buffer capacity
+    buffer_size: int = 8                    # FedBuff-style buffer capacity; on
+                                            # the event-driven node this is the
+                                            # per-task arrival-buffer size an
+                                            # aggregation event waits for
+    max_wait: float = float("inf")          # event-driven node: max simulated
+                                            # seconds an aggregation event
+                                            # waits for the buffer to fill
+                                            # before sealing whatever cohort
+                                            # arrived (inf = fill the buffer)
     # aggregation topology
     mode: str = "allreduce"                 # "allreduce" | "head_gather" (paper-faithful)
     head_rotation_seed: int = 0

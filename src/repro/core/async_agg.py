@@ -15,6 +15,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FederationConfig
 from repro.core import hierarchy, trust
@@ -29,6 +30,19 @@ def init_async_state(updates_like, W: int) -> AsyncState:
     pending = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32),
                            updates_like)
     return AsyncState(staleness=jnp.zeros((W,), jnp.int32), pending=pending)
+
+
+def host_staleness_update(staleness, mask):
+    """Host-side (numpy) mirror of the jit path's staleness rule: arrived
+    workers reset to 0, everyone else ages by one round.
+
+    The event-driven node keeps this mirror in ``FederatedTask`` so the
+    *pre-round* staleness snapshot can be recorded in on-chain settlement
+    records without a device sync; it must stay in lockstep with
+    ``async_round``'s ``new_staleness`` (and ``AsyncScheduler.staleness``) —
+    there is an agreement property test."""
+    m = np.asarray(mask) > 0
+    return np.where(m, 0, np.asarray(staleness, np.int64) + 1)
 
 
 def async_round(updates, scores, mask, state: AsyncState,

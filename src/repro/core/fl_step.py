@@ -127,10 +127,17 @@ def make_fl_round(cfg: ModelConfig, fed: FederationConfig, tc: TrainConfig,
         stats = trust.update_stats(updates, losses[:, 0], losses[:, -1])
         scores = trust.scores_from_stats(stats, fed)
 
+        metrics = {"mean_loss": jnp.mean(losses[:, -1])}
         if fed.async_mode:
+            # first-class async round variant: staleness-weighted buffered
+            # aggregation over the arrived cohort (core.async_agg), with the
+            # cohort/staleness telemetry the event-driven node reports
             assert async_state is not None and participation is not None
             agg, new_async, weights = async_agg.async_round(
                 updates, scores, participation, async_state, fed)
+            metrics["cohort_size"] = jnp.sum(participation > 0)
+            metrics["mean_staleness"] = jnp.mean(
+                async_state.staleness.astype(jnp.float32))
         else:
             weights = trust.trust_weights(scores, fed,
                                           participation=participation)
@@ -146,8 +153,7 @@ def make_fl_round(cfg: ModelConfig, fed: FederationConfig, tc: TrainConfig,
             lambda g, a: (g.astype(jnp.float32) + a).astype(g.dtype),
             global_params, agg)
         out = RoundOutput(new_global, new_opt, scores, weights,
-                          losses[:, -1],
-                          {"mean_loss": jnp.mean(losses[:, -1])})
+                          losses[:, -1], metrics)
         if fed.async_mode:
             return out, new_async
         return out

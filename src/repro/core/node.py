@@ -45,9 +45,32 @@ drained and discarded, and every subsequent interaction with that task
 raises a ``TaskSettlementError`` carrying the failing ``task_id`` and
 round index. Only a failure of the shared block seal itself (after every
 surviving task's merge) poisons the whole node.
+
+Event-driven settlement (the paper's §III.E async pillar, first-class).
+``run_events`` replaces the lockstep tick cadence with an *arrival
+frontier*: each async task owns an ``async_sim.AsyncScheduler`` (its
+per-task simulated clock — heavy-tailed speeds, jitter, dropout), and the
+node repeatedly pops the task whose next aggregation event is earliest in
+simulated time, then runs ONE round for THAT task only: arrival frontier →
+staleness-weighted aggregate → cohort seal. The arrived cohort is the
+round's participation mask, the jitted round weights it by trust ×
+``(1+staleness)^-alpha`` (``core.async_agg``), and settlement seals
+exactly that cohort — under ``sparse_settlement`` as a PR-6 ``DeltaCommit``
+whose changed set is the cohort, so idle workers stay proof-covered while
+the seal costs O(cohort), not O(W). Each worker's pre-round staleness is
+mirrored host-side (``FederatedTask.staleness``, kept in lockstep with the
+device ``AsyncState``) and recorded in the on-chain settlement records, so
+staleness-discounted penalties and payouts are auditable. Slow tasks never
+stall fast ones: a straggling co-tenant simply has later event times, and
+every event seals independently through the same settler pipeline as
+``run_tick``. The degenerate case — every worker arrives every event,
+staleness identically 0 — is bit-identical to driving ``run_tick`` with
+full participation (property-tested: block hashes, penalties, payouts,
+elections).
 """
 from __future__ import annotations
 
+import heapq
 import os
 import queue
 import threading
@@ -65,6 +88,7 @@ from repro.chain.ipfs import IPFSStore
 from repro.chain.ledger import Ledger
 from repro.configs.base import FederationConfig, ModelConfig, TrainConfig
 from repro.core import async_agg, fl_step
+from repro.core.async_sim import AsyncScheduler, WorkerProfile
 from repro.core.gossip import ClusterExchange
 from repro.core.reputation import ReputationBook
 from repro.models import api
@@ -101,6 +125,16 @@ class RoundRecord:
                                    # thread during this tick (threaded
                                    # settler: the queue handoff only)
     participation: Optional[np.ndarray] = None
+    staleness: Optional[np.ndarray] = None  # (W,) pre-round staleness of each
+                                   # worker's update (event-driven rounds;
+                                   # None on sync rounds) — what the
+                                   # settlement records commit on-chain
+    sim_time: float = 0.0          # simulated event time this round sealed
+                                   # at (run_events; 0.0 under run_tick)
+    arrival_times: Optional[np.ndarray] = None  # (W,) simulated arrival
+                                   # instant of each cohort update (NaN off
+                                   # the cohort); sim_time - arrival_times
+                                   # is per-update settlement latency
     settled: bool = False
     settle_time: float = 0.0       # host chain work on the settler thread
                                    # (contract + Merkle + IPFS); set when
@@ -131,6 +165,7 @@ class _StartedRound:
     out: Any
     t0: float
     participation: Optional[np.ndarray]
+    staleness: Optional[np.ndarray] = None   # pre-round host staleness mirror
 
 
 class ShardWorkerPool:
@@ -252,6 +287,7 @@ class TaskRoundWork:
     scores: np.ndarray
     model_cid: str = ""
     worker_ids: Optional[np.ndarray] = None
+    staleness: Optional[np.ndarray] = None   # aligned with scores
 
 
 def _interleave_shard_thunks(task_order: List[str],
@@ -329,7 +365,8 @@ def settle_tasks_block(ledger: Ledger, work: List[TaskRoundWork],
         try:
             preps[w.task_id] = w.contract.prepare_round_batch(
                 w.round_index, w.scores, w.worker_ids,
-                shards=eff_shards.get(w.task_id))
+                shards=eff_shards.get(w.task_id),
+                staleness=w.staleness)
         except BaseException as e:
             errors[w.task_id] = e
             continue
@@ -639,7 +676,8 @@ class FederatedTask:
     def __init__(self, node: "ChainNode", task_id: str, cfg: ModelConfig,
                  fed: FederationConfig, tc: TrainConfig, *, seed: int = 0,
                  adversary: Optional[Callable] = None,
-                 reputation_leaders: bool = False) -> None:
+                 reputation_leaders: bool = False,
+                 profiles: Optional[List[WorkerProfile]] = None) -> None:
         self.node = node
         self.task_id = task_id
         self.cfg, self.fed, self.tc = cfg, fed, tc
@@ -662,11 +700,28 @@ class FederatedTask:
 
         self.async_state = None
         self.scheduler = None
+        # event-driven state: this task's arrival frontier (its per-task
+        # simulated clock) and the host-side mirror of the device
+        # AsyncState's staleness — the pre-round snapshot the settlement
+        # records commit on-chain without a device sync
+        self.arrival: Optional[AsyncScheduler] = None
+        self.staleness: Optional[np.ndarray] = None
         if fed.async_mode:
             updates_like = jax.tree.map(
                 lambda x: jnp.zeros((self.W,) + x.shape, jnp.float32),
                 self.global_params)
             self.async_state = async_agg.init_async_state(updates_like, self.W)
+            self.staleness = np.zeros(self.W, np.int64)
+            if profiles is not None:
+                if len(profiles) != self.W:
+                    raise ValueError(
+                        f"{len(profiles)} arrival profiles for {self.W} "
+                        f"workers")
+                self.arrival = AsyncScheduler(
+                    profiles, seed=seed, task_id=task_id,
+                    buffer_size=fed.buffer_size, max_wait=fed.max_wait)
+        elif profiles is not None:
+            raise ValueError("arrival profiles need fed.async_mode=True")
 
         self.contract: Optional[TrustContract] = None
         self.exchange: Optional[ClusterExchange] = None
@@ -679,6 +734,8 @@ class FederatedTask:
                 settlement_shards=fed.settlement_shards,
                 sparse_settlement=fed.sparse_settlement,
                 sparse_rebase_every=fed.sparse_rebase_every,
+                staleness_alpha=(fed.staleness_alpha if fed.async_mode
+                                 else 0.0),
                 task_id=task_id)
             self.contract.join_batch(self.W)   # integer ids, one batch tx
             self.exchange = ClusterExchange(node.ipfs, node.ledger,
@@ -747,7 +804,15 @@ class FederatedTask:
         self.rng, rkey = jax.random.split(self.rng)
         part = (None if participation is None
                 else jnp.asarray(participation, jnp.int32))
+        stale = None
         if self.fed.async_mode:
+            if participation is not None:
+                # snapshot the pre-round staleness (what the jit round's
+                # discount sees) for the settlement records, then age the
+                # host mirror by the same rule the device applies
+                stale = self.staleness.copy()
+                self.staleness = async_agg.host_staleness_update(
+                    self.staleness, participation)
             out, self.async_state = self._round_fn(
                 self.global_params, self.opt_state, batch, rkey,
                 part, self.async_state)
@@ -759,7 +824,7 @@ class FederatedTask:
             out.scores.copy_to_host_async()
         except AttributeError:     # backend without async host copies
             pass
-        return _StartedRound(ridx, out, t0, participation)
+        return _StartedRound(ridx, out, t0, participation, stale)
 
     def _finish_round(self, st: _StartedRound, chain_time: float
                       ) -> Tuple[RoundRecord, _PendingRound]:
@@ -788,7 +853,8 @@ class FederatedTask:
             model_cid="", wall_time=train_time + chain_time,
             chain_time=chain_time,
             participation=None if st.participation is None
-            else np.asarray(st.participation))
+            else np.asarray(st.participation),
+            staleness=st.staleness)
         # chainless settlement only reads scores — don't pin up to
         # pipeline_depth extra param trees in the queue for nothing
         pending = _PendingRound(
@@ -891,6 +957,12 @@ class ChainNode:
         self.tasks: Dict[str, FederatedTask] = {}
         self._tick = 0
         self._pending: Optional[_TickPending] = None
+        # event-driven frontier: task_id → (next event sim-time, cohort
+        # mask) already drawn from the task's arrival scheduler but not yet
+        # run — kept across run_events calls so resuming never skips or
+        # re-draws an event
+        self._event_frontier: Dict[
+            str, Tuple[float, np.ndarray, np.ndarray]] = {}
         # shard workers spawn lazily at task registration, only when some
         # task's settlement is sharded, the driver is threaded, and the
         # contract's leaf-size gate could ever feed them (an explicit
@@ -906,12 +978,17 @@ class ChainNode:
     def create_task(self, task_id: str, cfg: ModelConfig,
                     fed: FederationConfig, tc: TrainConfig, *, seed: int = 0,
                     adversary: Optional[Callable] = None,
-                    reputation_leaders: bool = False) -> FederatedTask:
+                    reputation_leaders: bool = False,
+                    profiles: Optional[List[WorkerProfile]] = None
+                    ) -> FederatedTask:
         """Register a new federated task (deploys its ``TrustContract`` on
         the shared ledger). Tasks may join a running node; in-flight ticks
         are drained first so the joining task's round-0 randomness derives
         from a deterministic chain head (every round run before the
-        registration, never a racing settler append)."""
+        registration, never a racing settler append). ``profiles`` (one
+        ``async_sim.WorkerProfile`` per worker; needs ``fed.async_mode``)
+        attaches the task's arrival frontier so ``run_events`` can drive it
+        event-by-event."""
         if self._closed:
             raise RuntimeError("chain node already closed")
         if task_id in self.tasks:
@@ -919,7 +996,8 @@ class ChainNode:
         self.drain()
         task = FederatedTask(self, task_id, cfg, fed, tc, seed=seed,
                              adversary=adversary,
-                             reputation_leaders=reputation_leaders)
+                             reputation_leaders=reputation_leaders,
+                             profiles=profiles)
         self.tasks[task_id] = task
         self._settler.register_task(
             task_id, self.ledger.head.hash if self.ledger is not None
@@ -1005,6 +1083,69 @@ class ChainNode:
             raise failures[0]
         return recs
 
+    def run_events(self, batch_fns: Dict[str, Callable[[int], Dict]],
+                   *, events: int) -> Dict[str, List[RoundRecord]]:
+        """Drive the node event-by-event for ``events`` aggregation events
+        across the tasks in ``batch_fns`` (each ``task_id → fn(round_index)
+        → batch`` — called lazily, only when that task's event fires).
+
+        Every task must be async (``fed.async_mode``) with an arrival
+        frontier attached (``create_task(..., profiles=...)``). The node
+        repeatedly pops the task whose next aggregation event is earliest
+        in simulated time (ties break on task_id — deterministic) and runs
+        one ``run_tick`` round for that task alone: participation = the
+        arrived cohort, aggregation staleness-weighted on device,
+        settlement sealing exactly that cohort through the normal settler
+        pipeline (one block per event). An event whose window closed with
+        an empty cohort (every arrival lost) still consumes simulated time
+        but runs no round. Records carry ``sim_time`` (the event's
+        simulated seal time) and ``staleness`` (the cohort's pre-round
+        staleness, also committed in the on-chain records).
+
+        Returns ``task_id → [RoundRecord, ...]`` for the rounds run (tasks
+        whose events never fired within the budget map to ``[]``).
+        Frontier state persists on the node, so consecutive calls continue
+        the same simulation; a poisoned task raises its
+        ``TaskSettlementError`` out of its event exactly like ``run_tick``.
+        """
+        tids = sorted(batch_fns)
+        for tid in tids:
+            if tid not in self.tasks:
+                raise KeyError(f"unknown task {tid!r}")
+            if self.tasks[tid].arrival is None:
+                raise ValueError(
+                    f"task {tid!r} has no arrival frontier — register it "
+                    f"with create_task(..., profiles=[...]) and "
+                    f"fed.async_mode=True to drive it event-by-event")
+        heap: List[Tuple[float, str]] = []
+        for tid in tids:
+            if tid not in self._event_frontier:
+                arrival = self.tasks[tid].arrival
+                t, mask, _ = arrival.next_aggregation()
+                self._event_frontier[tid] = (t, mask,
+                                             arrival.arrival_times().copy())
+            heap.append((self._event_frontier[tid][0], tid))
+        heapq.heapify(heap)
+        out: Dict[str, List[RoundRecord]] = {tid: [] for tid in tids}
+        for _ in range(int(events)):
+            if not heap:
+                break
+            t, tid = heapq.heappop(heap)
+            _, mask, at = self._event_frontier.pop(tid)
+            task = self.tasks[tid]
+            if mask.sum() > 0:
+                rec = self.run_tick(
+                    {tid: batch_fns[tid](task.round_index)},
+                    participation={tid: mask})[tid]
+                rec.sim_time = t
+                rec.arrival_times = at
+                out[tid].append(rec)
+            nt, nmask, _ = task.arrival.next_aggregation()
+            self._event_frontier[tid] = (nt, nmask,
+                                         task.arrival.arrival_times().copy())
+            heapq.heappush(heap, (nt, tid))
+        return out
+
     def _hand_off_pending(self) -> None:
         tp, self._pending = self._pending, None
         if tp is not None:
@@ -1041,6 +1182,7 @@ class ChainNode:
                 continue
             live.append((task, p, t0))
             scores, wids = p.scores, None
+            stale = p.record.staleness
             if task.contract.sparse_settlement \
                     and p.record.participation is not None:
                 # sparse settlement: the round's *changed set* is the
@@ -1049,8 +1191,10 @@ class ChainNode:
                 mask = np.asarray(p.record.participation).astype(bool)
                 wids = np.nonzero(mask)[0].astype(np.int64)
                 scores = p.scores[wids]
+                if stale is not None:
+                    stale = stale[wids]
             work.append(TaskRoundWork(tid, task.contract, ridx, scores,
-                                      cid, worker_ids=wids))
+                                      cid, worker_ids=wids, staleness=stale))
         if work:
             # logical timestamp: every node (and the serial reference
             # driver) seals byte-identical blocks for the same tick

@@ -43,6 +43,12 @@ into the block's delta commit (see ``chain.contract``), while every block
 still commits and proves the full population. ``ipfs_owner_quota_bytes``
 caps this task's logical bytes on the artifact store (``QuotaExceeded``
 surfaces as a ``TaskSettlementError``).
+
+Event-driven mode: construct with ``fed.async_mode=True`` and
+``arrival_profiles`` (one ``async_sim.WorkerProfile`` per worker), then
+drive with ``run_events(batch_fn, events=N)`` — the single-task view of
+``ChainNode.run_events`` (arrival frontier → staleness-weighted aggregate
+→ cohort seal; see ``repro.core.node``).
 """
 from __future__ import annotations
 
@@ -71,14 +77,16 @@ class SDFLBProtocol:
                  seed: int = 0,
                  adversary=None,
                  reputation_leaders: bool = False,
-                 ipfs_owner_quota_bytes: int = 0) -> None:
+                 ipfs_owner_quota_bytes: int = 0,
+                 arrival_profiles=None) -> None:
         self._node = ChainNode(use_blockchain=use_blockchain,
                                pipeline_depth=fed.pipeline_depth,
                                settler_pool_size=fed.settler_pool_size,
                                ipfs_owner_quota_bytes=ipfs_owner_quota_bytes)
         self._task = self._node.create_task(
             fed.task_id, cfg, fed, tc, seed=seed, adversary=adversary,
-            reputation_leaders=reputation_leaders)
+            reputation_leaders=reputation_leaders,
+            profiles=arrival_profiles)
 
     # everything the old monolithic protocol exposed lives on the task
     # (model/contract/history/reputation/...) or the node (ledger/ipfs/
@@ -128,6 +136,14 @@ class SDFLBProtocol:
             participation=None if participation is None
             else {tid: participation})
         return recs[tid]
+
+    def run_events(self, batch_fn, *, events: int) -> list:
+        """Event-driven driver (``ChainNode.run_events``) for this one
+        task: needs ``fed.async_mode`` and ``arrival_profiles`` at
+        construction. ``batch_fn(round_index) → batch`` is called lazily
+        per event. Returns this task's new ``RoundRecord`` list."""
+        tid = self._task.task_id
+        return self._node.run_events({tid: batch_fn}, events=events)[tid]
 
     def flush(self) -> None:
         """Settle every round still in flight: hand off the trailing

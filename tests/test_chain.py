@@ -254,7 +254,7 @@ def test_batched_block_merkle_audit_and_tamper_detection():
     rec0 = decode_settlement_record(led.record_batch(blk.index)[1])
     assert rec0 == {"round": 0, "worker": 1, "score": pytest.approx(0.4),
                     "penalty": pytest.approx(5.0),
-                    "stake_after": pytest.approx(5.0)}
+                    "stake_after": pytest.approx(5.0), "staleness": 0}
     # tampering with an off-chain record breaks deep verification and the
     # record's proof, while the block hash chain itself stays intact
     led.tamper_record(blk.index, 1, b"x" * 40)
