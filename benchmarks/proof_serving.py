@@ -1,0 +1,195 @@
+"""Chain read path at scale — batched proof serving + light-client QPS
+(``BENCH_proof_serving.json``, CI-gated).
+
+Chain-only (no jitted learning): drives the ``repro.serve`` read API
+against a live settlement contract at worker counts where the proof
+arithmetic is the signal.
+
+Part A — batched multiproof vs independent proofs. One
+``get_proofs``/``verify_batch`` round trip for a 1k-worker batch against
+1k independent ``settlement_proof``/``verify_settlement`` calls over the
+same records. The batch ships each shared Merkle node once and the light
+client recomputes each tree level in one framed sha256 pass, so it must
+be ≥ ``speedup_floor`` (3×) faster end to end — and ships a small
+fraction of the digests.
+
+Part B — sustained reader QPS under live settlement. A writer thread
+keeps sealing dense full-population rounds while reader threads (one
+``LightClient`` each) loop head-sync → fetch a random batch for the
+latest settled round → verify. Readers take no locks (the ledger's
+publication-order contract), so the gates are two-sided: verified
+proofs/sec ≥ ``qps_floor`` *and* the writer's dense per-record settle
+cost stays under the same ``per_record_budget_us`` the async-node bench
+gates — serving reads must not tax the write path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_json, csv_row
+from repro.chain.contract import TrustContract
+from repro.chain.ledger import Ledger
+from repro.serve import (ChainReadServer, LightClient, RoundNotSettled,
+                         StaleProofError)
+
+
+def _contract(W: int) -> TrustContract:
+    c = TrustContract(Ledger(), requester_deposit=1e6, worker_stake=10.0,
+                      penalty_pct=50.0, trust_threshold=0.5,
+                      top_k=max(W // 100, 1), merkle_chunk_size=64)
+    c.join_batch(W)
+    return c
+
+
+def run(W: int = 100_000, rounds: int = 4, batch: int = 1_000,
+        qps_batch: int = 256, readers: int = 4, duration_s: float = 1.5,
+        repeats: int = 5, speedup_floor: float = 3.0,
+        qps_floor: float = 2_000.0, per_record_budget_us: float = 5.0,
+        seed: int = 0, wall_gates: bool = True,
+        json_name: str = "proof_serving"):
+    rng = np.random.default_rng(seed)
+
+    # -- Part A: batched fetch+verify vs independent proofs ------------------
+    contract = _contract(W)
+    for r in range(rounds):
+        contract.settle_round_batch(r, rng.random(W),
+                                    timestamp=float(r + 1))
+    server = ChainReadServer(contracts=contract)
+    client = LightClient(server)
+    client.sync()
+    audit_round = rounds - 1
+    wids = np.sort(rng.choice(W, size=batch, replace=False))
+
+    batched_times = []
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        pb = client.fetch_proofs(None, wids, round_index=audit_round)
+        assert client.verify_batch(pb)
+        batched_times.append(time.monotonic() - t0)
+    batched_s = float(np.median(batched_times))
+
+    indep_times = []
+    for _ in range(max(repeats // 2, 1)):
+        t0 = time.monotonic()
+        for w in wids:
+            proof = contract.settlement_proof(audit_round, int(w))
+            assert contract.verify_settlement(proof)
+        indep_times.append(time.monotonic() - t0)
+    indep_s = float(np.median(indep_times))
+
+    indep_digests = sum(
+        len(contract.settlement_proof(audit_round, int(w))["proof"])
+        for w in wids[:64]) * batch // 64
+    speedup = indep_s / batched_s
+    dedup = indep_digests / max(pb.num_digests, 1)
+    csv_row(f"proof_serving_batched_w{W}", batched_s * 1e6,
+            f"batch={batch} digests={pb.num_digests} "
+            f"per_proof_us={batched_s / batch * 1e6:.2f}")
+    csv_row(f"proof_serving_indep_w{W}", indep_s * 1e6,
+            f"digests~{indep_digests} speedup={speedup:.1f}x "
+            f"digest_dedup={dedup:.0f}x")
+    assert speedup >= speedup_floor, \
+        (f"batched proof serving only {speedup:.2f}x faster than "
+         f"{batch} independent proofs (floor {speedup_floor}x)")
+
+    # -- Part B: reader QPS under concurrent settlement ----------------------
+    live = _contract(W)
+    live_server = ChainReadServer(contracts=live, max_batch=batch)
+    live.settle_round_batch(0, rng.random(W), timestamp=1.0)
+
+    stop = threading.Event()
+    writer_times: list = []
+
+    def writer() -> None:
+        r = 1
+        scores = rng.random(W)
+        while not stop.is_set():
+            t0 = time.monotonic()
+            live.settle_round_batch(r, scores, timestamp=float(r + 1))
+            writer_times.append(time.monotonic() - t0)
+            r += 1
+
+    verified = np.zeros(readers, np.int64)
+    rejected = np.zeros(readers, np.int64)
+
+    def reader(i: int) -> None:
+        lc = LightClient(live_server)
+        r = np.random.default_rng((seed, i))
+        while not stop.is_set():
+            lc.sync()
+            ids = r.integers(0, W, size=qps_batch)
+            try:
+                pb = live_server.get_proofs(
+                    None, ids, round_index=live_server
+                    .latest_settled_round(None))
+            except (RoundNotSettled, KeyError):
+                continue
+            try:
+                ok = lc.verify_batch(pb)
+            except StaleProofError:     # writer sealed mid-loop: re-anchor
+                lc.sync()
+                ok = lc.verify_batch(pb)
+            if ok:
+                verified[i] += qps_batch
+            else:
+                rejected[i] += qps_batch
+
+    threads = [threading.Thread(target=writer)] + \
+        [threading.Thread(target=reader, args=(i,)) for i in range(readers)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join()
+    elapsed = time.monotonic() - t0
+
+    qps = float(verified.sum()) / elapsed
+    rounds_sealed = len(writer_times)
+    live_per_record_us = (float(np.median(writer_times)) / W * 1e6
+                          if writer_times else float("nan"))
+    csv_row(f"proof_serving_qps_w{W}", 1e6 / max(qps, 1e-9),
+            f"qps={qps:.0f} readers={readers} qps_batch={qps_batch} "
+            f"rounds_sealed={rounds_sealed} "
+            f"writer_per_record_us={live_per_record_us:.3f}")
+    assert rejected.sum() == 0, \
+        f"{int(rejected.sum())} honest proofs failed verification"
+    if wall_gates:
+        assert qps >= qps_floor, \
+            (f"reader throughput {qps:.0f} proofs/s under live settlement "
+             f"below the {qps_floor:.0f} floor")
+        assert rounds_sealed >= 1 and \
+            live_per_record_us < per_record_budget_us, \
+            (f"write path under reader load: {live_per_record_us:.3f}us "
+             f"per record > {per_record_budget_us}us budget "
+             f"({rounds_sealed} rounds sealed)")
+
+    payload = {
+        "W": W, "rounds": rounds, "batch": batch,
+        "batched": {"s": batched_s, "digests": pb.num_digests,
+                    "per_proof_us": batched_s / batch * 1e6},
+        "independent": {"s": indep_s, "digests_est": indep_digests},
+        "live": {"readers": readers, "qps_batch": qps_batch,
+                 "duration_s": elapsed, "qps": qps,
+                 "proofs_verified": int(verified.sum()),
+                 "rounds_sealed_concurrently": rounds_sealed,
+                 "writer_per_record_us": live_per_record_us},
+        "gates": {
+            "batched_speedup": speedup,
+            "batched_speedup_floor": speedup_floor,
+            "digest_dedup": dedup,
+            "qps": qps, "qps_floor": qps_floor,
+            "writer_per_record_us": live_per_record_us,
+            "per_record_budget_us": per_record_budget_us,
+        },
+    }
+    bench_json(json_name, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(W=10_000, rounds=3, duration_s=1.0)

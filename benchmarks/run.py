@@ -17,7 +17,7 @@ def main() -> None:
                     help="reduced rounds/samples (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig3,fig4,fig56,"
-                         "trust,async,async_node,cfl,chain,kernels,"
+                         "trust,async,async_node,serve,cfl,chain,kernels,"
                          "roofline)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -26,7 +26,8 @@ def main() -> None:
     from benchmarks import (async_ablation, async_node, cfl_baseline,
                             fig2_blockchain, fig3_scalability,
                             fig4_reliability, fig56_convergence,
-                            kernel_bench, roofline, trust_ablation)
+                            kernel_bench, proof_serving, roofline,
+                            trust_ablation)
 
     suite = {
         "fig2": lambda: fig2_blockchain.run(
@@ -52,6 +53,13 @@ def main() -> None:
             sync_rounds=3 if q else 4,
             async_events=120 if q else 400,
             chain_events=6 if q else 8),
+        # chain read path: batched multiproof speedup vs independent proofs
+        # + light-client QPS under live settlement (writes the CI-gated
+        # BENCH_proof_serving.json)
+        "serve": lambda: proof_serving.run(
+            W=10_000 if q else 100_000,
+            rounds=3 if q else 4,
+            duration_s=1.0 if q else 1.5),
         "cfl": lambda: cfl_baseline.run(
             rounds=25 if q else 50, samples=2048 if q else 4096),
         "kernels": kernel_bench.run,

@@ -56,12 +56,17 @@ def main() -> None:
           f"(e.g. block {multi[0].index} commits "
           f"{sorted(multi[0].task_roots)})")
 
-    # a three-level settlement proof out of a co-tenant block
-    a = tasks["hospital-fl"].contract
-    proof = a.settlement_proof(0, 0)
-    print(f"3-level proof for hospital-fl worker 0 round 0: "
-          f"{len(proof['proof'])} siblings, "
-          f"verifies={a.verify_settlement(proof)}")
+    # a light client audits a co-tenant block's three-level proof without
+    # trusting the node: synced headers + a batched proof fetch
+    from repro.serve import LightClient
+    auditor = LightClient(node.read_server())
+    auditor.sync()
+    batch = auditor.fetch_proofs("hospital-fl", list(range(6)),
+                                 round_index=0)
+    print(f"3-level proofs for all 6 hospital-fl workers, round 0: "
+          f"{batch.num_digests} shared siblings, "
+          f"verifies={auditor.verify_batch(batch)}, "
+          f"worker 0 record={batch.decoded(0)}")
 
     payouts = node.finalize()
     for tid, task in tasks.items():

@@ -10,6 +10,7 @@ from repro.configs.base import FederationConfig, TrainConfig
 from repro.configs.registry import get_config
 from repro.core.protocol import SDFLBProtocol
 from repro.data.datasets import make_federated_mnist
+from repro.serve import LightClient
 
 
 def main() -> None:
@@ -35,8 +36,17 @@ def main() -> None:
                   f"trust={rec.scores.round(2).tolist()}  "
                   f"heads={rec.heads}  cid={settled.model_cid[:12]}…")
 
+    # audit a worker without trusting the node: a light client holds only
+    # verified headers, fetches a settlement proof, and checks it itself
+    auditor = LightClient(proto.node.read_server())
+    auditor.sync()
+    record = auditor.audit(None, 0)
+    print(f"\nlight-client audit (headers only, {auditor.height} synced): "
+          f"worker 0 settled round {record['round']} with "
+          f"score={record['score']:.3f} stake={record['stake_after']:.1f}")
+
     payouts = proto.finalize()
-    print("\nledger verified:", proto.ledger.verify_chain(),
+    print("ledger verified:", proto.ledger.verify_chain(),
           f"({len(proto.ledger.blocks)} blocks, {proto.ipfs.puts} IPFS puts)")
     print("payouts:", {k: round(v, 2) for k, v in payouts.items()})
 

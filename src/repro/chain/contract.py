@@ -77,14 +77,22 @@ applies to aggregation weight): a late-but-honest update is discounted,
 not punished at full freshness weight. ``alpha=0`` — the default and the
 synchronous path — is bit-identical to staleness-unaware settlement.
 
-The legacy scalar API (``join`` / ``settle_round`` with a score dict /
-dict-like ``workers`` access) is kept as a thin wrapper over the batch
-path, so Algorithm 1 semantics are provably unchanged (see the
-batch-vs-scalar equivalence property test in ``tests/test_chain.py``).
+The documented surface is the batch API (``join_batch`` /
+``settle_round_batch``) plus the typed proof surface (``proof`` returning
+``repro.chain.proofs.SettlementProof``, verified with
+``SettlementProof.verify(head)``). The legacy scalar API (``join`` /
+``settle_round`` with a score dict / dict-like ``workers`` access) lives
+behind the explicit ``contract.legacy`` namespace — still a thin wrapper
+over the batch path, so Algorithm 1 semantics are provably unchanged (see
+the batch-vs-scalar equivalence property test in ``tests/test_chain.py``);
+calling ``join``/``settle_round`` directly warns ``DeprecationWarning``.
+Likewise ``settlement_proof``/``verify_settlement`` remain as deprecated
+dict-shaped wrappers emitting bit-identical proofs.
 """
 from __future__ import annotations
 
 import os
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, List, Mapping, Optional, Tuple
 
@@ -92,6 +100,7 @@ import numpy as np
 
 from repro.chain.ledger import (DeltaCommit, Ledger, MerkleTree, RecordBatch,
                                 gathered_leaf_digests, plan_shard_bounds)
+from repro.chain.proofs import SettlementProof, build_settlement_proof
 
 
 class ContractError(RuntimeError):
@@ -385,8 +394,7 @@ class TrustContract:
                              "first_id": base, "stake_each": self.F})
         return np.arange(base, base + count)
 
-    def join(self, worker_id: str) -> None:
-        """Legacy scalar enrollment (thin wrapper: one-row batch)."""
+    def _join_scalar(self, worker_id: str) -> None:
         if self.closed:
             raise ContractError("task closed")
         if worker_id in self._index:
@@ -398,6 +406,19 @@ class TrustContract:
         self._names.append(worker_id)
         self.pending.append({"type": "join", "worker": worker_id,
                              "stake": self.F})
+
+    def join(self, worker_id: str) -> None:
+        """Deprecated scalar enrollment — use ``join_batch`` (or, for
+        intentionally per-worker demos, ``contract.legacy.join``)."""
+        warnings.warn(
+            "TrustContract.join is deprecated; use join_batch "
+            "(or contract.legacy.join)", DeprecationWarning, stacklevel=2)
+        self._join_scalar(worker_id)
+
+    @property
+    def legacy(self) -> "LegacyContractAPI":
+        """The sanctioned namespace for the scalar per-worker API."""
+        return LegacyContractAPI(self)
 
     def worker_id(self, name: str) -> int:
         return self._index[name]
@@ -699,6 +720,18 @@ class TrustContract:
 
     def settle_round(self, round_index: int, scores: Dict[str, float],
                      model_cid: str = "") -> Dict[str, float]:
+        """Deprecated scalar settlement — use ``settle_round_batch`` (or
+        ``contract.legacy.settle_round`` for intentionally scalar
+        callers)."""
+        warnings.warn(
+            "TrustContract.settle_round is deprecated; use "
+            "settle_round_batch (or contract.legacy.settle_round)",
+            DeprecationWarning, stacklevel=2)
+        return self._settle_round_scalar(round_index, scores, model_cid)
+
+    def _settle_round_scalar(self, round_index: int,
+                             scores: Dict[str, float],
+                             model_cid: str = "") -> Dict[str, float]:
         """Legacy scalar API: score dict in, penalties dict out (bad workers
         only, matching the original loop). Thin wrapper over the batch path;
         dict order is normalized exactly like the original ``sorted`` loop."""
@@ -761,60 +794,54 @@ class TrustContract:
 
     # -- per-worker audit -----------------------------------------------------
 
-    def settlement_proof(self, round_index: int, worker) -> Dict:
-        """O(log(W/k) + k) auditable proof that worker ``worker`` (id or
-        name) was settled as recorded in ``round_index``'s block: the
-        record's chunk (the k records sharing its Merkle leaf, ``offset``
-        locating the record within it) plus the node path to the block
-        root — chunk-in-shard, shard-in-task, and (on multi-task blocks)
-        task-in-block levels concatenated. Dense rounds commit only the
-        participating records (the record's position is its rank among
-        the round's ids); sparse (delta) rounds commit the *full
-        population*, record index == worker id — so idle workers are
-        provable in every delta block too."""
+    def record_position(self, round_index: int, worker_id: int) -> int:
+        """Where a worker's record sits in the round's block commit: dense
+        rounds commit only the participating records (the position is the
+        worker's rank among the round's ids); sparse (delta) rounds commit
+        the *full population* with record index == worker id — so idle
+        workers are provable in every delta block too."""
+        if self._round_full_cover.get(round_index):
+            return int(worker_id)
+        ids = self._round_ids[round_index]
+        return int(np.nonzero(ids == worker_id)[0][0])
+
+    def proof(self, round_index: int, worker) -> SettlementProof:
+        """O(log(W/k) + k) typed proof that worker ``worker`` (id or name)
+        was settled as recorded in ``round_index``'s block: the record's
+        chunk (the k records sharing its Merkle leaf, ``offset`` locating
+        the record within it), the node path to the block root —
+        chunk-in-shard, shard-in-task, and (on multi-task blocks)
+        task-in-block levels concatenated — and the decoded record view.
+        Verify with ``proof.verify(head)`` against any trusted head (a
+        ``Block``, a light client's ``BlockHeader``, or a root string)."""
         wid = worker if isinstance(worker, (int, np.integer)) \
             else self._index[worker]
         block_index = self._round_blocks[round_index]
-        if self._round_full_cover.get(round_index):
-            pos = int(wid)
-        else:
-            ids = self._round_ids[round_index]
-            pos = int(np.nonzero(ids == wid)[0][0])
-        chunk, offset = self.ledger.record_chunk(block_index, pos,
-                                                 task_id=self.task_id)
-        return {"block_index": block_index, "leaf_index": pos,
-                "leaf": chunk[offset], "chunk": chunk, "offset": offset,
-                "proof": self.ledger.merkle_proof(block_index, pos,
-                                                  task_id=self.task_id),
-                "root": self.ledger.blocks[block_index].records_root,
-                "record": decode_settlement_record(chunk[offset])}
+        pos = self.record_position(round_index, int(wid))
+        return build_settlement_proof(self.ledger, block_index, pos,
+                                      task_id=self.task_id,
+                                      decode=decode_settlement_record)
 
-    def verify_settlement(self, proof: Dict) -> bool:
-        """Self-contained check of a ``settlement_proof`` dict: the claimed
-        record must sit at its offset in the chunk, the decoded ``record``
-        view must match the authenticated leaf bytes, the chunk must hash
-        to the root through the node path, and the root must match the
-        block's on-chain commitment. Malformed (attacker-supplied) proofs
-        are rejected, never raised on."""
+    def settlement_proof(self, round_index: int, worker) -> Dict:
+        """Deprecated dict view of :meth:`proof` — bit-identical to the
+        pre-redesign output (property-tested); new code should carry the
+        typed ``SettlementProof``."""
+        return self.proof(round_index, worker).as_legacy_dict()
+
+    def verify_settlement(self, proof) -> bool:
+        """Deprecated wrapper over ``SettlementProof.verify``: accepts the
+        legacy proof dict (or a ``SettlementProof``) and checks it against
+        this ledger's committed block head. Malformed (attacker-supplied)
+        proofs are rejected, never raised on."""
         try:
-            chunk = proof.get("chunk", [proof["leaf"]])
-            offset = proof.get("offset", 0)
-            if not (isinstance(offset, int) and 0 <= offset < len(chunk)):
-                return False
-            if chunk[offset] != proof["leaf"]:
-                return False
-            if "record" in proof:   # the human-readable view is part of the
-                # claim — it must decode from the leaf
-                if decode_settlement_record(proof["leaf"]) != proof["record"]:
-                    return False
-            return MerkleTree.verify(b"".join(chunk), proof["proof"],
-                                     proof["root"]) and \
-                proof["root"] == self.ledger.blocks[
-                    proof["block_index"]].records_root
+            sp = proof if isinstance(proof, SettlementProof) \
+                else SettlementProof.from_legacy(proof)
+            head = self.ledger.blocks[sp.block_index]
         except (TypeError, ValueError, IndexError, KeyError):
-            # any malformed shape — unsized chunk, non-buffer leaf, bad hex
-            # digests or sides, missing keys — is rejected, never raised on
+            # any malformed shape — unsized chunk, non-buffer leaf, missing
+            # keys, out-of-chain block index — is rejected, never raised on
             return False
+        return sp.verify(head)
 
     def _worker_scores(self, index: int) -> List[float]:
         out = []
@@ -830,3 +857,29 @@ class TrustContract:
         """Money is conserved: pool + requester + stakes + balances."""
         return (self.reward_pool + self.requester_balance +
                 float(self.stake.sum()) + float(self.balance.sum()))
+
+
+class LegacyContractAPI:
+    """Explicit namespace for the scalar per-worker contract API.
+
+    ``contract.legacy.join(name)`` and ``contract.legacy.settle_round(r,
+    scores_dict)`` keep the original single-worker semantics (thin,
+    equivalence-tested wrappers over the batch path) for small demos and
+    back-compat callers — without the ``DeprecationWarning`` that calling
+    ``join``/``settle_round`` directly on the contract now emits. The
+    documented surface is ``join_batch`` / ``settle_round_batch``."""
+
+    __slots__ = ("_contract",)
+
+    def __init__(self, contract: TrustContract) -> None:
+        self._contract = contract
+
+    def join(self, worker_id: str) -> None:
+        """Scalar enrollment (one-row batch)."""
+        self._contract._join_scalar(worker_id)
+
+    def settle_round(self, round_index: int, scores: Dict[str, float],
+                     model_cid: str = "") -> Dict[str, float]:
+        """Scalar settlement: score dict in, bad-worker penalties out."""
+        return self._contract._settle_round_scalar(round_index, scores,
+                                                   model_cid)

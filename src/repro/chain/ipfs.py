@@ -11,7 +11,7 @@ stdlib zlib (same API, blobs stay self-consistent within a process/run).
 from __future__ import annotations
 
 import hashlib
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import msgpack
@@ -107,6 +107,10 @@ class IPFSStore:
         self.dedup_hits = 0
         self.puts_by_owner: Dict[str, int] = {}
         self.bytes_by_owner: Dict[str, int] = {}
+        # streaming (read-path) accounting: byte-range reads served to
+        # checkpoint-streaming clients (repro.serve)
+        self.reads = 0
+        self.bytes_read = 0
 
     def put_tree(self, tree: Any, owner: str = None) -> str:
         blob = _pack_tree(tree)
@@ -134,6 +138,26 @@ class IPFSStore:
             raise ValueError(f"content hash mismatch for {cid}")
         self.gets += 1
         return _unpack_leaves(blob)[0]
+
+    def blob_size(self, cid: str) -> int:
+        """Stored (compressed) byte size of a blob — what a streaming
+        server paginates over the wire."""
+        return len(self._store[cid])
+
+    def read_blob(self, cid: str, start: int = 0,
+                  stop: Optional[int] = None) -> bytes:
+        """Raw byte-range read of a stored blob. No hash check here — a
+        streaming client verifies the *reassembled* blob against its
+        content address (the cid), which is what makes bounded-chunk
+        checkpoint streaming tamper-evident end to end without the server
+        materializing whole blobs per request."""
+        if start < 0:
+            raise ValueError("start must be >= 0")
+        blob = self._store[cid]
+        part = blob[start:len(blob) if stop is None else stop]
+        self.reads += 1
+        self.bytes_read += len(part)
+        return part
 
     def has(self, cid: str) -> bool:
         return cid in self._store

@@ -368,7 +368,11 @@ class MerkleTree:
     def verify(leaf: bytes, proof: Sequence[Tuple[str, str]],
                root: str) -> bool:
         """``leaf`` is the full leaf byte-string (any bytes-like object) —
-        for a chunked tree, the concatenation of the chunk's records."""
+        for a chunked tree, the concatenation of the chunk's records.
+
+        This is the low-level hashing primitive behind the unified
+        ``repro.chain.proofs.SettlementProof.verify`` — application code
+        should verify whole ``SettlementProof`` claims, not bare paths."""
         h = _leaf_digest(leaf)
         for side, sib_hex in proof:
             sib = bytes.fromhex(sib_hex)
@@ -901,6 +905,13 @@ class Ledger:
         self.work_units += 1 + len(transactions)
         if commit is not None:
             self.work_units += commit.hash_ops
+            # Publication order is the read path's lock-free contract: the
+            # block's commit is registered in `_commits` BEFORE the block
+            # becomes visible in `blocks` (list append is atomic under the
+            # GIL), and sealed commits are immutable — so a concurrent
+            # reader (`repro.serve.ChainReadServer`) that can see block i
+            # can always resolve block i's proofs without taking any lock,
+            # and never makes the settler thread wait.
             self._commits[blk.index] = commit
             if commit.num_tasks == 1:
                 only = commit.commit_for()
@@ -972,6 +983,23 @@ class Ledger:
 
     # -- per-record audit -----------------------------------------------------
 
+    def commit(self, block_index: int) -> MultiTaskCommit:
+        """The block's stored multi-task commit — the proof server's entry
+        into off-chain data availability (read-only; sealed commits are
+        immutable, so reader threads may hold one while the settler
+        appends)."""
+        return self._commits[block_index]
+
+    def settlement_proof(self, block_index: int, record_index: int,
+                         task_id: Optional[str] = None):
+        """Typed unified proof (``repro.chain.proofs.SettlementProof``)
+        for one committed record — the modern replacement for the
+        ``merkle_proof`` / ``record_chunk`` / ``verify_record`` triple;
+        verify with ``proof.verify(head)`` against any trusted head."""
+        from repro.chain.proofs import build_settlement_proof
+        return build_settlement_proof(self, block_index, record_index,
+                                      task_id)
+
     def task_ids(self, block_index: int) -> List[Optional[str]]:
         """Tasks committed in a block, canonical order."""
         return list(self._commits[block_index].task_ids)
@@ -1009,7 +1037,12 @@ class Ledger:
         record's shard, the shard path to its task's super-root, and the
         task path to the block root (empty for single-task blocks) — for
         one settlement record of a batched block; auditing worker w never
-        rehashes the round."""
+        rehashes the round.
+
+        Deprecated thin wrapper: the bare path is one field of the typed
+        ``settlement_proof`` (property-tested identical to
+        ``SettlementProof.path``); new code should carry the whole
+        ``SettlementProof``."""
         return self._commits[block_index].record_proof(record_index, task_id)
 
     def record_chunk(self, block_index: int, record_index: int,
@@ -1027,7 +1060,11 @@ class Ledger:
         """Check one record against the on-chain root (record/proof default
         to the ledger's own stored copies; pass externally-held values to
         audit a third party's claim). The leaf is recomputed from the
-        record's chunk with ``leaf`` substituted at the record's offset."""
+        record's chunk with ``leaf`` substituted at the record's offset.
+
+        Deprecated thin wrapper over ``SettlementProof.verify`` (the one
+        verification rule for every block flavor)."""
+        from repro.chain.proofs import SettlementProof
         blk = self.blocks[block_index]
         if not blk.records_root:
             return False
@@ -1036,7 +1073,12 @@ class Ledger:
             chunk[offset] = leaf
         if proof is None:
             proof = self.merkle_proof(block_index, record_index, task_id)
-        return MerkleTree.verify(b"".join(chunk), proof, blk.records_root)
+        sp = SettlementProof(block_index=block_index,
+                             leaf_index=record_index, chunk=tuple(chunk),
+                             offset=offset,
+                             path=tuple(tuple(p) for p in proof),
+                             root=blk.records_root)
+        return sp.verify(blk)
 
     def tamper_record(self, block_index: int, record_index: int,
                       leaf: bytes, task_id: Optional[str] = None) -> None:

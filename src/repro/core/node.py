@@ -938,7 +938,18 @@ class ChainNode:
     ``create_task``. Drive with ``run_tick({task_id: batch, ...})``; tasks
     run at independent cadences by simply not firing every tick. See the
     module docstring for the tick/block layout, fairness, and failure
-    isolation rules."""
+    isolation rules.
+
+    Read path (``read_server()``): proof serving is lock-free by design,
+    so readers never block — or wait on — the settler write path. The
+    invariants that make this safe: ``Ledger._seal`` registers a block's
+    commit *before* publishing the block (so any block a reader can see
+    has resolvable proofs), sealed commits/blocks are immutable, and the
+    contract's round bookkeeping (``note_block``) is written only after
+    the seal — a reader that cannot resolve a round yet simply treats it
+    as not-yet-settled and retries after its next head sync. Readers
+    resolve tasks by key lookup on ``tasks`` (never iteration), so
+    concurrent ``create_task`` registration is safe too."""
 
     def __init__(self, *, use_blockchain: bool = True,
                  pipeline_depth: int = 2,
@@ -1029,6 +1040,15 @@ class ChainNode:
         """Sticky per-task settlement failures: task_id → (round, error)."""
         return {tid: err for tid in sorted(self.tasks)
                 if (err := self._settler.task_error(tid)) is not None}
+
+    def read_server(self, **kwargs) -> "object":
+        """A ``repro.serve.ChainReadServer`` over this live node: head-sync
+        handshakes, batched settlement-proof fetch, and checkpoint
+        streaming for light clients, served lock-free off the published
+        chain state (see the class docstring's read-path invariants) while
+        the ``_SettlerPool`` keeps sealing."""
+        from repro.serve import ChainReadServer
+        return ChainReadServer(self, **kwargs)
 
     # -- one node tick ---------------------------------------------------------
 
