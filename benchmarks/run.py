@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig3,fig4,fig56,"
                          "trust,async,async_node,serve,cfl,chain,kernels,"
-                         "roofline)")
+                         "fused_round,roofline)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     q = args.quick
@@ -63,6 +63,14 @@ def main() -> None:
         "cfl": lambda: cfl_baseline.run(
             rounds=25 if q else 50, samples=2048 if q else 4096),
         "kernels": kernel_bench.run,
+        # fused flat-pack trust round vs per-leaf reference on paper-CNN
+        # shapes up to the 10k cohort (writes the CI-gated
+        # BENCH_fused_round.json: fused HBM passes <= 2, no wall regression
+        # of the default path)
+        "fused_round": lambda: kernel_bench.run_fused_round(
+            worker_counts=(256, 1024, 4096) if q
+            else (256, 1024, 4096, 10240),
+            e2e=not q),
         "roofline": roofline.run,
         # chain-layer scaling: dense batch settlement vs the legacy scalar
         # path, then the sparse delta path (W=1M at full scale — the

@@ -176,6 +176,23 @@ class FederationConfig:
     # aggregation topology
     mode: str = "allreduce"                 # "allreduce" | "head_gather" (paper-faithful)
     head_rotation_seed: int = 0
+    fused_trust_path: str = "auto"          # flat-pack + fused Pallas trust
+                                            # round (kernels.fused_round):
+                                            # the cohort's updates pack into
+                                            # ONE (W, D) matrix and trust
+                                            # stats + weighted aggregation
+                                            # run in two streamed HBM passes
+                                            # instead of ~5 per-leaf sweeps.
+                                            # "auto" engages for unsharded
+                                            # flat/CNN param trees (uniform
+                                            # leaf dtype, no mesh
+                                            # constraints); "on" forces it
+                                            # (errors on unpackable trees);
+                                            # "off" keeps the per-leaf
+                                            # reference path everywhere.
+                                            # Value-equivalent to every
+                                            # aggregation ``mode`` (the
+                                            # hierarchy telescopes)
     # chain-layer scaling knobs
     merkle_chunk_size: int = 64             # settlement records per Merkle
                                             # leaf (commit hashes ~2W/k nodes;

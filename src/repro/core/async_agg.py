@@ -45,6 +45,18 @@ def host_staleness_update(staleness, mask):
     return np.where(m, 0, np.asarray(staleness, np.int64) + 1)
 
 
+def effective_weights(scores, mask, staleness,
+                      fed: FederationConfig) -> jax.Array:
+    """The async round's normalized aggregation weights:
+    trust × penalization-filter × participation × staleness-discount.
+    Shared by the per-leaf reference (``async_round``) and the fused
+    flat-pack path (``fl_step``) so the two can only differ in the
+    aggregation's reduction order, never in the weight math."""
+    discount = trust.staleness_discount(staleness, fed.staleness_alpha)
+    w = trust.trust_weights(scores, fed, participation=mask) * discount
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
+
+
 def async_round(updates, scores, mask, state: AsyncState,
                 fed: FederationConfig) -> Tuple[object, AsyncState, jax.Array]:
     """One asynchronous aggregation round.
@@ -56,9 +68,7 @@ def async_round(updates, scores, mask, state: AsyncState,
     # arrivals contribute their accumulated pending + fresh update
     total = jax.tree.map(
         lambda p, u: p + u.astype(jnp.float32), state.pending, updates)
-    discount = trust.staleness_discount(state.staleness, fed.staleness_alpha)
-    w = trust.trust_weights(scores, fed, participation=mask) * discount
-    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    w = effective_weights(scores, mask, state.staleness, fed)
     agg = hierarchy.aggregate(total, w, fed)
 
     # arrived workers flush their buffer & reset staleness. The keep-mask

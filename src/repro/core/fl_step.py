@@ -17,6 +17,17 @@ cluster-hierarchical, optionally asynchronous) is applied explicitly:
      discounting + pending buffers (core.async_agg)
   6. new global = global + aggregate
 
+Steps 3–5 have two implementations. The per-leaf reference streams the
+W×D update volume ~5 times (a full updates pytree, then three reductions
+per leaf, then the aggregate). The fused flat-pack path
+(``FederationConfig.fused_trust_path``, auto-on for unsharded flat/CNN
+trees) computes the deltas directly into ONE contiguous (W, D) matrix
+(``kernels.pack``) and chains the Pallas trust kernels
+(``kernels.fused_round``) — two streamed passes total, the pytree
+reassembled exactly once for the global update. Both paths share the
+score/weight math in ``core.trust``/``core.async_agg`` and are
+property-tested equivalent (``tests/test_fused_round.py``).
+
 Host-level protocol work (contract settlement, ledger blocks, IPFS
 publication, head rotation bookkeeping) happens *between* jitted rounds in
 ``core.protocol``.
@@ -30,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FederationConfig, ModelConfig, TrainConfig
 from repro.core import async_agg, hierarchy, trust
+from repro.kernels import fused_round, ops, pack
 from repro.models import api
 from repro.optim import clip_grads, init_opt, opt_update
 
@@ -45,6 +57,49 @@ class RoundOutput(NamedTuple):
 
 def num_workers(fed: FederationConfig, *, pods: int = 1) -> int:
     return fed.num_clusters * fed.workers_per_cluster * pods
+
+
+def fused_round_enabled(cfg: ModelConfig, fed: FederationConfig, params,
+                        *, constrained: bool = False) -> bool:
+    """Static (trace-time) decision for the flat-pack fused trust path.
+
+    ``auto`` engages only where flattening is free: an unsharded
+    (no mesh constraints — reshaping a model-sharded leaf to (W, D)
+    would force a full all-gather) flat/CNN param tree with one leaf
+    dtype. ``on`` forces it for any packable tree; ``off`` keeps the
+    per-leaf reference everywhere.
+    """
+    knob = fed.fused_trust_path
+    if knob == "off":
+        return False
+    ok = pack.packable(params)
+    if knob == "on":
+        if not ok:
+            raise ValueError(
+                "fused_trust_path='on' requires a packable param tree "
+                "(uniform floating leaf dtype)")
+        return True
+    if knob != "auto":
+        raise ValueError(f"fused_trust_path must be auto|on|off, "
+                         f"got {knob!r}")
+    return ok and cfg.family == "cnn" and not constrained
+
+
+def init_async_state_for(cfg: ModelConfig, fed: FederationConfig,
+                         global_params, W: int) -> async_agg.AsyncState:
+    """Async state matching the path ``make_fl_round`` will take: on the
+    fused path the pending buffer is a flat (W_pad, D_pad) f32 matrix
+    (padded once to the async kernel's tile grid — see
+    ``fused_round.pending_shape``); otherwise the per-leaf pytree."""
+    if fused_round_enabled(cfg, fed, global_params):
+        spec = pack.pack_spec(global_params)
+        return async_agg.AsyncState(
+            staleness=jnp.zeros((W,), jnp.int32),
+            pending=jnp.zeros(fused_round.pending_shape(W, spec.total),
+                              jnp.float32))
+    updates_like = jax.tree.map(
+        lambda x: jnp.zeros((W,) + x.shape, jnp.float32), global_params)
+    return async_agg.init_async_state(updates_like, W)
 
 
 def make_fl_round(cfg: ModelConfig, fed: FederationConfig, tc: TrainConfig,
@@ -65,6 +120,8 @@ def make_fl_round(cfg: ModelConfig, fed: FederationConfig, tc: TrainConfig,
     loss_fn = api.loss_fn(cfg, remat=tc.remat, kv_chunk=tc.kv_chunk)
     wsc = worker_constraint or (lambda t: t)
     pwsc = param_constraint or (lambda t: t)
+    constrained = (worker_constraint is not None
+                   or param_constraint is not None)
 
     def worker_train(params, opt, batch, rng):
         """One worker: ``local_steps`` SGD steps on its own data."""
@@ -92,6 +149,9 @@ def make_fl_round(cfg: ModelConfig, fed: FederationConfig, tc: TrainConfig,
         participation: optional (W,) 0/1; async_state: async_agg.AsyncState.
         """
         W = jax.tree.leaves(batch)[0].shape[0]
+        # trace-time path selection: dtypes/structure only, no data
+        use_fused = fused_round_enabled(cfg, fed, global_params,
+                                        constrained=constrained)
         params_w = wsc(hierarchy.broadcast_to_workers(global_params, W))
         rngs_w = (jax.random.split(rngs, W) if rngs is not None else None)
         if tc.local_steps == 1:
@@ -109,45 +169,96 @@ def make_fl_round(cfg: ModelConfig, fed: FederationConfig, tc: TrainConfig,
                 return clip_grads(g, tc.grad_clip), l
             vm = jax.vmap(worker_grad,
                           in_axes=(0, 0, 0 if rngs is not None else None))
-            grads, l = vm(params_w, batch, rngs_w)
+            grads, l_pre = vm(params_w, batch, rngs_w)
             new_p, new_opt = opt_update(params_w, wsc(grads), opt_state, tc)
-            losses = l[:, None]
+            if fed.w_loss > 0:
+                # contribution quality needs a live loss delta: re-evaluate
+                # the SAME batch (and dropout rng — the mask cancels) at the
+                # post-step params. Without this, a single local step would
+                # yield losses[:,0] == losses[:,-1] and the paper's
+                # loss-improvement term would silently contribute nothing.
+                def worker_loss(p, b, r):
+                    step_batch = jax.tree.map(lambda x: x[0], b)
+                    return loss_fn(pwsc(p), step_batch, r)[0]
+                vl = jax.vmap(worker_loss,
+                              in_axes=(0, 0, 0 if rngs is not None else None))
+                l_post = vl(new_p, batch, rngs_w)
+                losses = jnp.stack([l_pre, l_post], axis=1)
+            else:
+                losses = l_pre[:, None]
         else:
             vm = jax.vmap(worker_train,
                           in_axes=(0, 0, 0, 0 if rngs is not None else None))
             new_p, new_opt, losses = vm(params_w, opt_state, batch, rngs_w)
         new_p = wsc(new_p)
 
-        # deltas are stored in the param dtype (bf16 deltas carry full
-        # *relative* precision; trust stats and aggregation upcast per-leaf)
-        updates = wsc(jax.tree.map(
-            lambda a, g: (a.astype(jnp.float32)
-                          - g.astype(jnp.float32)[None]).astype(a.dtype),
-            new_p, global_params))
-        stats = trust.update_stats(updates, losses[:, 0], losses[:, -1])
-        scores = trust.scores_from_stats(stats, fed)
-
-        metrics = {"mean_loss": jnp.mean(losses[:, -1])}
-        if fed.async_mode:
-            # first-class async round variant: staleness-weighted buffered
-            # aggregation over the arrived cohort (core.async_agg), with the
-            # cohort/staleness telemetry the event-driven node reports
-            assert async_state is not None and participation is not None
-            agg, new_async, weights = async_agg.async_round(
-                updates, scores, participation, async_state, fed)
-            metrics["cohort_size"] = jnp.sum(participation > 0)
-            metrics["mean_staleness"] = jnp.mean(
-                async_state.staleness.astype(jnp.float32))
+        metrics = {"mean_loss": jnp.mean(losses[:, -1]),
+                   "mean_loss_delta": jnp.mean(losses[:, 0] - losses[:, -1])}
+        if use_fused:
+            # flat-pack fused path: deltas land directly in ONE contiguous
+            # (W, D) matrix (param dtype — bf16 deltas carry full *relative*
+            # precision), trust stats + weighted aggregation chain the
+            # fused kernels (2 streamed HBM passes over the update volume),
+            # and the pytree is reassembled exactly once from the (D,)
+            # aggregate. Every aggregation ``mode`` telescopes to the same
+            # Σ w·u, so the fused sum is value-identical to the hierarchy.
+            spec = pack.pack_spec(global_params)
+            upd_flat = pack.pack_delta(new_p, global_params, spec)
+            stats = trust.update_stats_flat(upd_flat,
+                                            losses[:, 0], losses[:, -1])
+            scores = trust.scores_from_stats(stats, fed)
+            if fed.async_mode:
+                assert async_state is not None and participation is not None
+                weights = async_agg.effective_weights(
+                    scores, participation, async_state.staleness, fed)
+                keep = 1.0 - participation.astype(jnp.float32)
+                agg_flat, new_pending = ops.fused_async_agg(
+                    upd_flat, async_state.pending, weights, keep)
+                new_staleness = jnp.where(participation > 0, 0,
+                                          async_state.staleness + 1)
+                new_async = async_agg.AsyncState(new_staleness, new_pending)
+                metrics["cohort_size"] = jnp.sum(participation > 0)
+                metrics["mean_staleness"] = jnp.mean(
+                    async_state.staleness.astype(jnp.float32))
+            else:
+                weights = trust.trust_weights(scores, fed,
+                                              participation=participation)
+                agg_flat = ops.fused_agg(upd_flat, weights)
+                new_async = async_state
+            agg = pack.unpack_vector(agg_flat, spec)
         else:
-            weights = trust.trust_weights(scores, fed,
-                                          participation=participation)
-            if fed.mode == "head_gather":
-                agg = hierarchy.aggregate_head_gather(updates, weights, fed)
-            elif fed.mode == "two_stage":
-                agg = hierarchy.aggregate(updates, weights, fed)
-            else:   # "allreduce": fused (identical value, one collective)
-                agg = hierarchy.aggregate_fused(updates, weights)
-            new_async = async_state
+            # per-leaf reference: deltas are stored in the param dtype (bf16
+            # deltas carry full *relative* precision; trust stats and
+            # aggregation upcast per-leaf)
+            updates = wsc(jax.tree.map(
+                lambda a, g: (a.astype(jnp.float32)
+                              - g.astype(jnp.float32)[None]).astype(a.dtype),
+                new_p, global_params))
+            stats = trust.update_stats(updates, losses[:, 0], losses[:, -1])
+            scores = trust.scores_from_stats(stats, fed)
+
+            if fed.async_mode:
+                # first-class async round variant: staleness-weighted
+                # buffered aggregation over the arrived cohort
+                # (core.async_agg), with the cohort/staleness telemetry the
+                # event-driven node reports
+                assert async_state is not None and participation is not None
+                agg, new_async, weights = async_agg.async_round(
+                    updates, scores, participation, async_state, fed)
+                metrics["cohort_size"] = jnp.sum(participation > 0)
+                metrics["mean_staleness"] = jnp.mean(
+                    async_state.staleness.astype(jnp.float32))
+            else:
+                weights = trust.trust_weights(scores, fed,
+                                              participation=participation)
+                if fed.mode == "head_gather":
+                    agg = hierarchy.aggregate_head_gather(updates, weights,
+                                                          fed)
+                elif fed.mode == "two_stage":
+                    agg = hierarchy.aggregate(updates, weights, fed)
+                else:   # "allreduce": fused (identical value, one collective)
+                    agg = hierarchy.aggregate_fused(updates, weights)
+                new_async = async_state
 
         new_global = jax.tree.map(
             lambda g, a: (g.astype(jnp.float32) + a).astype(g.dtype),

@@ -707,10 +707,10 @@ class FederatedTask:
         self.arrival: Optional[AsyncScheduler] = None
         self.staleness: Optional[np.ndarray] = None
         if fed.async_mode:
-            updates_like = jax.tree.map(
-                lambda x: jnp.zeros((self.W,) + x.shape, jnp.float32),
-                self.global_params)
-            self.async_state = async_agg.init_async_state(updates_like, self.W)
+            # pending-buffer layout must match the path make_fl_round takes
+            # (flat (W_pad, D_pad) matrix on the fused path, pytree otherwise)
+            self.async_state = fl_step.init_async_state_for(
+                cfg, fed, self.global_params, self.W)
             self.staleness = np.zeros(self.W, np.int64)
             if profiles is not None:
                 if len(profiles) != self.W:

@@ -11,8 +11,13 @@ the per-worker update vectors u_w and provisional consensus c = mean_w u_w:
 S(w) = w_cos·cos⁺ + w_norm·norm + w_loss·loss ∈ [0, 1].
 
 Statistics are computed per-leaf and reduced (never materializing a (W, D)
-matrix for billion-parameter models); the Pallas ``trust_score`` kernel is
-the fused flat-vector variant used on the CNN/flat path.
+matrix for billion-parameter models) on the reference path;
+``update_stats_flat`` is the fused flat-pack variant (the ``trust_score``
+Pallas kernel: one HBM sweep over the packed (W, D) update matrix) that
+``fl_step`` engages via ``FederationConfig.fused_trust_path`` on flat/CNN
+param trees. Both paths feed the same ``scores_from_stats`` — the score,
+LOO-consensus, and penalization-filter math is shared, so the fused round
+can only differ by reduction order.
 """
 from __future__ import annotations
 
@@ -46,6 +51,16 @@ def update_stats(updates, loss_before, loss_after) -> TrustStats:
               for x in leaves)
     sq_u = sum(jnp.sum(jnp.square(x), axis=red(x)) for x in leaves)
     sq_c = sum(jnp.sum(jnp.square(jnp.mean(x, axis=0))) for x in leaves)
+    return TrustStats(dot=dot, sq_u=sq_u, sq_c=sq_c,
+                      loss_delta=loss_before - loss_after)
+
+
+def update_stats_flat(updates_flat, loss_before, loss_after) -> TrustStats:
+    """Fused-path twin of ``update_stats``: one streamed HBM pass over the
+    flat-packed (W, D) update matrix (``kernels.fused_round.fused_stats``
+    — Pallas on TPU, the identical flat-jnp reference on CPU)."""
+    from repro.kernels import ops
+    dot, sq_u, sq_c = ops.fused_stats(updates_flat)
     return TrustStats(dot=dot, sq_u=sq_u, sq_c=sq_c,
                       loss_delta=loss_before - loss_after)
 

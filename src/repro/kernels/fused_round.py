@@ -1,0 +1,242 @@
+"""Fused device-resident trust round — one-sweep scoring + aggregation.
+
+The per-leaf reference path in ``core.fl_step`` streams the W×D update
+volume ~5 times per round (dot/sq_u/sq_c reductions in
+``trust.update_stats``, then the weighted aggregate). The aggregation
+weights depend on *global* statistics of the whole matrix, so one pass is
+information-theoretically impossible without a W×D intermediate — the
+floor is two streamed passes, and this module hits it:
+
+  pass 1  ``fused_stats``     one HBM sweep producing dot/sq_u/sq_c
+                              (the ``trust_score`` kernel: consensus
+                              recomputed in-VMEM per tile, no second
+                              stream of c)
+  (O(W))  score/weight math   ``trust.scores_from_stats`` +
+                              ``trust_weights`` — W-sized, runs off the
+                              hot path, pipelined by XLA against the
+                              second pass's prologue
+  pass 2  ``fused_agg``       one MXU sweep for the weighted aggregate
+                              (sync), or ``fused_async_agg`` — a NEW
+                              kernel that in the same sweep folds the
+                              pending buffer (total = pending + update),
+                              emits the staleness-discounted aggregate
+                              AND the flushed new pending, so the async
+                              path's buffer logic costs no extra pass
+                              over the update matrix
+
+Dispatch: on TPU the Pallas kernels run natively; on CPU/CI the flat-jnp
+references (``kernels.ref``) execute the identical packed math (interpret
+mode is for kernel-correctness tests — set ``SDFLB_FUSED_INTERPRET=1`` to
+force the Pallas bodies through the interpreter end-to-end).
+
+Tiling: the sync kernels hold full-W column blocks in VMEM, so
+``block_d_for`` shrinks the D tile as W grows (W ≲ 16k bf16 / 12k f32 at
+the 128-lane floor — the 10k-cohort target fits; beyond that the
+per-leaf path remains). The async kernel tiles BOTH dims (grid =
+D-tiles × W-tiles, aggregate accumulated over the inner W axis), so its
+cohort size is unbounded; its pending buffer persists padded to the tile
+grid (``pending_shape``) so no per-round pad/slice copies are needed.
+
+``streamed_bytes``/``update_passes`` compute the chain's exact HBM
+traffic from the BlockSpec geometry (every index map visits each element
+once per call) — XLA's ``cost_analysis`` cannot see through a fused
+kernel body, so the benchmark gate counts the kernel's bytes this way
+and uses cost_analysis only for the unfused comparison.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+from repro.kernels.trust_agg import trust_agg
+from repro.kernels.trust_score import trust_score_stats
+
+LANE = 128
+SUBLANE = 8
+# VMEM budget for one streamed tile (the pipeline double-buffers on top)
+_VMEM_TILE_BUDGET = 8 * 1024 * 1024
+
+INTERPRET = jax.default_backend() != "tpu"
+# CI smoke knob: force the Pallas bodies through the interpreter instead
+# of the flat-jnp reference dispatch (kernel-correctness end-to-end)
+FORCE_KERNEL = os.environ.get("SDFLB_FUSED_INTERPRET", "") == "1"
+
+
+def _use_kernel() -> bool:
+    return (not INTERPRET) or FORCE_KERNEL
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def block_d_for(W: int, itemsize: int) -> int:
+    """Lane-aligned D tile for the full-W-block kernels: as wide as the
+    VMEM tile budget allows at this W, capped at 2048 and floored at one
+    lane (the floor can exceed the budget for W ≳ 12k f32 — documented
+    ceiling of the sync kernels)."""
+    lanes = _VMEM_TILE_BUDGET // max(1, W * itemsize * LANE)
+    return int(min(2048, max(LANE, lanes * LANE)))
+
+
+# -- async kernel geometry ----------------------------------------------------
+
+BLOCK_W = 256      # W tile of the async kernel (sublane-aligned)
+BLOCK_D_ASYNC = 512
+
+
+def pending_shape(W: int, D: int) -> tuple:
+    """Persistent (W_pad, D_pad) storage shape of the flat async pending
+    buffer — padded once at init to the async kernel's tile grid so
+    rounds never pad/slice the (W, D) volume."""
+    bw = min(BLOCK_W, _round_up(W, SUBLANE))
+    return (_round_up(W, bw), _round_up(D, BLOCK_D_ASYNC))
+
+
+# -- the async fused kernel ---------------------------------------------------
+
+
+def _async_kernel(w_ref, keep_ref, upd_ref, pend_ref, agg_ref, newp_ref):
+    """One (BW, BD) tile: total = pending + update; emit the flushed new
+    pending and accumulate the weighted aggregate over the inner W axis.
+
+    w_ref: (1, BW) weight slice · keep_ref: (BW, 1) keep mask slice
+    upd_ref/pend_ref/newp_ref: (BW, BD) · agg_ref: (1, BD) accumulator.
+    """
+    wi = pl.program_id(1)                    # inner: W tiles
+    u = upd_ref[...].astype(jnp.float32)
+    total = pend_ref[...] + u
+    newp_ref[...] = total * keep_ref[...]
+    part = jnp.dot(w_ref[...], total, preferred_element_type=jnp.float32)
+
+    @pl.when(wi == 0)
+    def _init():
+        agg_ref[...] = part
+
+    @pl.when(wi > 0)
+    def _acc():
+        agg_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_async_agg_kernel(updates, pending, weights, keep, *,
+                           interpret: bool = False):
+    """updates: (W, D); pending: ``pending_shape(W, D)`` f32;
+    weights/keep: (W,) → (agg (D,) f32, new_pending (W_pad, D_pad) f32).
+
+    One streamed pass over the update volume computes the weighted
+    aggregate of (pending + update) AND the flushed pending
+    (``total·keep``) — the async path's whole post-score data motion.
+    """
+    W, D = updates.shape
+    Wp, Dp = pending.shape
+    assert (Wp, Dp) == pending_shape(W, D), \
+        f"pending {pending.shape} != pending_shape({W},{D})"
+    bw = min(BLOCK_W, Wp)
+    bd = min(BLOCK_D_ASYNC, Dp)
+    upd = jnp.pad(updates, ((0, Wp - W), (0, Dp - D)))
+    w_row = jnp.pad(weights.astype(jnp.float32), (0, Wp - W)).reshape(1, Wp)
+    keep_col = jnp.pad(keep.astype(jnp.float32), (0, Wp - W)).reshape(Wp, 1)
+
+    agg, newp = pl.pallas_call(
+        _async_kernel,
+        grid=(Dp // bd, Wp // bw),           # W tiles innermost: accumulate
+        in_specs=[
+            pl.BlockSpec((1, bw), lambda d, w: (0, w),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bw, 1), lambda d, w: (w, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bw, bd), lambda d, w: (w, d),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bw, bd), lambda d, w: (w, d),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bd), lambda d, w: (0, d),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((bw, bd), lambda d, w: (w, d),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Dp), jnp.float32),
+            jax.ShapeDtypeStruct((Wp, Dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_row, keep_col, upd, pending)
+    return agg[0, :D], newp
+
+
+# -- dispatching public entry points ------------------------------------------
+
+
+def fused_stats(updates: jax.Array):
+    """Pass 1: (W, D) → (dot (W,), sq_u (W,), sq_c ()) vs the inclusive
+    consensus, in one HBM sweep."""
+    if _use_kernel():
+        bd = block_d_for(*_wd_itemsize(updates))
+        return trust_score_stats(updates, block_d=bd, interpret=INTERPRET)
+    return ref.trust_score_ref(updates)
+
+
+def fused_agg(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """Pass 2 (sync): (W, D) × (W,) → (D,) f32 weighted aggregate."""
+    if _use_kernel():
+        bd = block_d_for(*_wd_itemsize(updates))
+        return trust_agg(updates, weights, block_d=bd, interpret=INTERPRET)
+    return ref.trust_agg_ref(updates, weights)
+
+
+def fused_async_agg(updates, pending, weights, keep):
+    """Pass 2 (async): see ``fused_async_agg_kernel``. The flat-jnp
+    dispatch mirrors the padded pending geometry exactly."""
+    if _use_kernel():
+        return fused_async_agg_kernel(updates, pending, weights, keep,
+                                      interpret=INTERPRET)
+    W, D = updates.shape
+    Wp, Dp = pending.shape
+    upd = jnp.pad(updates, ((0, Wp - W), (0, Dp - D)))
+    wp = jnp.pad(weights.astype(jnp.float32), (0, Wp - W))
+    kp = jnp.pad(keep.astype(jnp.float32), (0, Wp - W))
+    agg, newp = ref.fused_async_agg_ref(upd, pending, wp, kp)
+    return agg[:D], newp
+
+
+def _wd_itemsize(updates):
+    return updates.shape[0], jnp.dtype(updates.dtype).itemsize
+
+
+# -- exact HBM accounting (BlockSpec geometry) --------------------------------
+
+
+def streamed_bytes(W: int, D: int, dtype, *, async_mode: bool = False):
+    """Exact per-round HBM traffic of the fused chain, from the kernels'
+    BlockSpec geometry (each index map visits every element exactly once
+    per call). Returns {update_read, other, total} in bytes."""
+    isz = jnp.dtype(dtype).itemsize
+    upd = W * D * isz
+    stats_out = (2 * W + 1) * 4
+    if async_mode:
+        Wp, Dp = pending_shape(W, D)
+        update_read = 2 * upd                     # stats pass + agg pass
+        other = (Wp * Dp * 4) * 2 + Dp * 4 \
+            + (2 * Wp) * 4 + stats_out            # pending r/w, agg, rows
+    else:
+        update_read = 2 * upd
+        other = D * 4 + W * 4 + stats_out         # aggregate out, weights
+    return {"update_read": float(update_read), "other": float(other),
+            "total": float(update_read + other)}
+
+
+def update_passes(W: int, D: int, dtype, *, async_mode: bool = False
+                  ) -> float:
+    """How many times the fused chain streams the W×D update volume
+    (the benchmark/CI gate asserts ≤ 2)."""
+    isz = jnp.dtype(dtype).itemsize
+    return streamed_bytes(W, D, dtype,
+                          async_mode=async_mode)["update_read"] / (W * D * isz)

@@ -13,6 +13,9 @@ from repro.kernels.trust_agg import trust_agg as _trust_agg
 from repro.kernels.trust_score import trust_score_stats as _trust_score_stats
 from repro.kernels.swa_decode import swa_decode as _swa_decode
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+# fused trust-round chain (flat-pack path) — backend-dispatching wrappers
+from repro.kernels.fused_round import (fused_agg, fused_async_agg,  # noqa: F401
+                                       fused_stats, pending_shape)
 
 INTERPRET = jax.default_backend() != "tpu"
 

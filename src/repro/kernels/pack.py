@@ -1,0 +1,124 @@
+"""Flat-pack layer: a param pytree as ONE contiguous (W, D) matrix.
+
+The fused trust path (``kernels.fused_round``) streams the whole cohort's
+update volume through Pallas kernels, which want a single dense matrix —
+not a pytree of per-layer stacks. This module is the stax2-style
+"unzip" of a param tree into static metadata + flat storage:
+
+  ``PackSpec``       static slice metadata (treedef + per-leaf shape/
+                     size/offset + pack dtype + total width D). Built
+                     once per model from the global param tree; every
+                     packed row shares the layout
+                     ``[leaf0.ravel() | leaf1.ravel() | ...]`` in
+                     ``jax.tree.leaves`` order.
+  ``pack_delta``     per-worker update deltas (new − global) computed
+                     directly into the (W, D) matrix in the pack dtype —
+                     the per-leaf delta pytree is never materialized as
+                     a user-level artifact (XLA fuses the subtract into
+                     the concat).
+  ``pack_stack``     (W, ...)-leaf pytree → (W, D)   (async pending).
+  ``unpack_vector``  (D,) → param-shaped pytree — the ONE reassembly per
+                     round (the aggregated global update).
+  ``unpack_stack``   (W, D) → (W, ...)-leaf pytree (tests/tooling).
+
+Dtype policy: the pack dtype is the tree's common leaf dtype (bf16 deltas
+carry full *relative* precision, matching the per-leaf path's storage
+rule); trees mixing dtypes are not ``packable`` and keep the per-leaf
+reference path. All kernels upcast tiles to f32 on read; ``unpack_vector``
+preserves its input dtype (the f32 aggregate).
+
+Specs are shape-only: building one from ``jax.eval_shape`` structs works,
+so launch tooling can size packs without touching device memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PackSpec(NamedTuple):
+    """Static slice metadata of a flat-packed param tree."""
+    treedef: Any                          # jax treedef of the template
+    shapes: Tuple[Tuple[int, ...], ...]   # per-leaf shapes (no W dim)
+    sizes: Tuple[int, ...]                # per-leaf element counts
+    offsets: Tuple[int, ...]              # per-leaf start column in the pack
+    dtype: Any                            # common storage dtype of the pack
+    total: int                            # D: columns of the packed matrix
+
+    def slices(self):
+        """Debug/audit view: (offset, size, shape) per leaf, pack order."""
+        return tuple(zip(self.offsets, self.sizes, self.shapes))
+
+
+def packable(tree) -> bool:
+    """True iff every leaf shares one floating dtype — the precondition
+    for a lossless single-dtype pack (mixed-dtype trees keep the
+    per-leaf reference path)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return False
+    dt = jnp.result_type(leaves[0])
+    return all(jnp.result_type(x) == dt for x in leaves) \
+        and jnp.issubdtype(dt, jnp.floating)
+
+
+def pack_spec(tree) -> PackSpec:
+    """Build the static layout from a template param tree (arrays or
+    ShapeDtypeStructs; leading W dims must NOT be present)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot pack an empty tree")
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    sizes = tuple(math.prod(s) for s in shapes)
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    dtype = jnp.result_type(*leaves)
+    return PackSpec(treedef, shapes, sizes, tuple(offsets),
+                    jnp.dtype(dtype), off)
+
+
+def pack_delta(new_params_w, global_params, spec: PackSpec) -> jax.Array:
+    """Per-worker update deltas straight into the (W, D) pack.
+
+    Numerically identical to the per-leaf path's update rule: the delta
+    is computed in f32 and stored in the pack dtype
+    (``(new_f32 − global_f32).astype(pack_dtype)``)."""
+    new_leaves = jax.tree.leaves(new_params_w)
+    g_leaves = jax.tree.leaves(global_params)
+    W = new_leaves[0].shape[0]
+    cols = []
+    for a, g in zip(new_leaves, g_leaves):
+        d = (a.astype(jnp.float32)
+             - g.astype(jnp.float32)[None]).astype(spec.dtype)
+        cols.append(d.reshape(W, -1))
+    return jnp.concatenate(cols, axis=1)
+
+
+def pack_stack(tree_w, spec: PackSpec, dtype=None) -> jax.Array:
+    """(W, ...)-leaf pytree → (W, D) in ``dtype`` (default: pack dtype)."""
+    leaves = jax.tree.leaves(tree_w)
+    W = leaves[0].shape[0]
+    dt = spec.dtype if dtype is None else jnp.dtype(dtype)
+    return jnp.concatenate(
+        [x.reshape(W, -1).astype(dt) for x in leaves], axis=1)
+
+
+def unpack_vector(vec: jax.Array, spec: PackSpec):
+    """(D,) → param-shaped pytree, preserving the vector's dtype. The
+    one reassembly per fused round (the aggregated global update)."""
+    leaves = [vec[o:o + s].reshape(shape)
+              for o, s, shape in spec.slices()]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def unpack_stack(mat: jax.Array, spec: PackSpec):
+    """(W, D) → (W, ...)-leaf pytree, preserving the matrix's dtype."""
+    W = mat.shape[0]
+    leaves = [mat[:, o:o + s].reshape((W,) + shape)
+              for o, s, shape in spec.slices()]
+    return jax.tree.unflatten(spec.treedef, leaves)

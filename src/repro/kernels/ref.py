@@ -22,6 +22,18 @@ def trust_score_ref(updates: jax.Array):
     return dot, sq_u, sq_c
 
 
+def fused_async_agg_ref(updates: jax.Array, pending: jax.Array,
+                        weights: jax.Array, keep: jax.Array):
+    """Flat async aggregate+flush: total = pending + updates (f32);
+    agg = Σ_w weights[w]·total[w]; new_pending = total·keep[:, None].
+    updates/pending: (W, D); weights/keep: (W,) → ((D,) f32, (W, D) f32).
+    """
+    total = pending.astype(jnp.float32) + updates.astype(jnp.float32)
+    agg = jnp.einsum("w,wd->d", weights.astype(jnp.float32), total)
+    new_pending = total * keep.astype(jnp.float32)[:, None]
+    return agg, new_pending
+
+
 def swa_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                    cur_index: int, window: int) -> jax.Array:
     """q: (B, H, hd); caches: (B, S, KV, hd). Single-token sliding-window

@@ -253,3 +253,38 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, cur_index):
 
 def param_count(params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --- flat-param view (the fused trust round's packed layout) -----------------
+# Thin delegations to ``kernels.pack`` so protocol/launch code can reason
+# about a model's flat (D,) coordinate space (slice offsets per leaf, total
+# length, pack dtype) without importing the kernel package directly.
+
+def flat_param_spec(params):
+    """Static pack metadata for ``params``: leaf order, (offset, size, shape)
+    slices into the flat axis, pack dtype, and total length D. Raises if the
+    tree mixes leaf dtypes (see ``flat_packable``)."""
+    from repro.kernels import pack
+    return pack.pack_spec(params)
+
+
+def flat_packable(params) -> bool:
+    """Whether ``params`` admits the flat view (uniform floating leaf dtype —
+    the eligibility signal behind ``FederationConfig.fused_trust_path``)."""
+    from repro.kernels import pack
+    return pack.packable(params)
+
+
+def flatten_params(params):
+    """params pytree -> ((D,) vector, spec). Inverse: ``unflatten_params``."""
+    from repro.kernels import pack
+    spec = pack.pack_spec(params)
+    flat = jnp.concatenate(
+        [x.reshape(-1) for x in jax.tree.leaves(params)])
+    return flat, spec
+
+
+def unflatten_params(flat, spec):
+    """(D,) vector + spec -> params pytree (exact inverse of flatten)."""
+    from repro.kernels import pack
+    return pack.unpack_vector(flat, spec)
