@@ -1,0 +1,135 @@
+"""Multi-node settlement reliability sweep (``BENCH_network_reliability.json``,
+CI-gated).
+
+Chain-only (no jitted learning): drives ``repro.net`` 3-node cohorts over
+seeded fault schedules and gates the ISSUE-level reliability claims:
+
+- **fault-free**: every seeded gossip order converges all replicas to one
+  byte-identical chain with bit-equal contract state — fraction must be
+  1.0;
+- **partition → rejoin**: a 2-round split forks the cohort; after the
+  partition lifts, every replica must land on the fork-choice winner
+  within ``rejoin_budget`` extra rounds (the CI gate), with the minority
+  replaying to state bit-equal to a from-scratch replay of the winning
+  chain;
+- **byzantine head**: an equivocating head must be *contained* in every
+  seeded run — detected by every honest replica, evidence sealed
+  on-chain, none of its blocks canonicalized — fraction must be 1.0.
+
+Derived CSV rows report messages delivered per settled round (the gossip
+overhead of the settlement layer) alongside the reliability fractions.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import bench_json, csv_row
+from repro.net import LinkSpec, NetworkHarness, contract_fingerprint, \
+    replay_chain
+
+
+def _fingerprints_equal(nodes) -> bool:
+    fps = [contract_fingerprint(n.contract) for n in nodes]
+    return all(fp == fps[0] for fp in fps[1:])
+
+
+def run(seeds: int = 20, rounds: int = 4, rejoin_budget: int = 2,
+        loss: float = 0.1, json_name: str = "network_reliability"):
+    t_start = time.monotonic()
+
+    # -- fault-free convergence under lossy links ----------------------------
+    ff_converged = 0
+    ff_msgs = ff_rounds = 0
+    for seed in range(seeds):
+        h = NetworkHarness(3, seed=seed,
+                           link=LinkSpec(latency=0.02, jitter=0.02,
+                                         loss=loss))
+        h.run(rounds)
+        h.sync()
+        ok = h.converged() and _fingerprints_equal(h.nodes)
+        ff_converged += ok
+        ff_msgs += h.net.delivered
+        ff_rounds += rounds
+    ff_frac = ff_converged / seeds
+    csv_row("net_fault_free_converged_frac", 0.0, f"{ff_frac:.2f}")
+    csv_row("net_msgs_per_round", 0.0, f"{ff_msgs / ff_rounds:.0f}")
+
+    # -- partition → forks → rejoin ------------------------------------------
+    rejoin_rounds = []
+    replay_ok = 0
+    for seed in range(seeds):
+        h = NetworkHarness(3, seed=seed,
+                           partition_rounds=[(1, 3, ((0, 1), (2,)))])
+        h.run(3)                     # rounds 1-2 run split: forks exist
+        used = rejoin_budget + 1     # pessimistic: did not converge
+        for extra in range(1, rejoin_budget + 1):
+            h.run(1)
+            if h.converged() and _fingerprints_equal(h.nodes):
+                used = extra
+                break
+        rejoin_rounds.append(used)
+        # minority state bit-equal to a from-scratch replay of the winner
+        n = h.nodes[2]
+        _, replayed = replay_chain(n.ledger.blocks, n.ledger._commits,
+                                   h.workers_per_node)
+        replay_ok += (contract_fingerprint(replayed)
+                      == contract_fingerprint(n.contract))
+    rejoin_max = max(rejoin_rounds)
+    rejoin_mean = sum(rejoin_rounds) / seeds
+    replay_frac = replay_ok / seeds
+    csv_row("net_rejoin_rounds_max", 0.0, str(rejoin_max))
+    csv_row("net_rejoin_rounds_mean", 0.0, f"{rejoin_mean:.2f}")
+    csv_row("net_rejoin_replay_bitequal_frac", 0.0, f"{replay_frac:.2f}")
+
+    # -- byzantine equivocating head -----------------------------------------
+    contained = 0
+    for seed in range(seeds):
+        byz = 1
+        h = NetworkHarness(3, seed=seed, byzantine={byz: "equivocate"})
+        h.run(rounds)
+        honest = h.honest_nodes()
+        ok = h.converged() and _fingerprints_equal(honest)
+        for n in honest:
+            txs = [tx for b in n.ledger.blocks for tx in b.transactions
+                   if isinstance(tx, dict)]
+            ok &= n.evidence_found >= 1
+            ok &= any(tx.get("type") == "equivocation"
+                      and tx["proposer"] == byz for tx in txs)
+            ok &= all(tx["proposer"] != byz for tx in txs
+                      if tx.get("type") == "seal")
+        contained += ok
+    byz_frac = contained / seeds
+    csv_row("net_byzantine_contained_frac", 0.0, f"{byz_frac:.2f}")
+
+    wall_s = time.monotonic() - t_start
+    payload = {
+        "seeds": seeds,
+        "rounds": rounds,
+        "link_loss": loss,
+        "fault_free_converged_frac": ff_frac,
+        "msgs_per_round": ff_msgs / ff_rounds,
+        "rejoin_budget_rounds": rejoin_budget,
+        "rejoin_rounds_max": rejoin_max,
+        "rejoin_rounds_mean": rejoin_mean,
+        "rejoin_replay_bitequal_frac": replay_frac,
+        "byzantine_contained_frac": byz_frac,
+        "wall_s": round(wall_s, 2),
+        "gates": {
+            "fault_free_converged_frac": 1.0,
+            "rejoin_rounds_max<=": rejoin_budget,
+            "rejoin_replay_bitequal_frac": 1.0,
+            "byzantine_contained_frac": 1.0,
+        },
+    }
+    bench_json(json_name, payload)
+
+    assert ff_frac == 1.0, f"fault-free convergence broke: {ff_frac}"
+    assert rejoin_max <= rejoin_budget, \
+        f"rejoin took {rejoin_max} rounds (budget {rejoin_budget})"
+    assert replay_frac == 1.0, f"replay bit-equality broke: {replay_frac}"
+    assert byz_frac == 1.0, f"byzantine head escaped: {byz_frac}"
+    return payload
+
+
+if __name__ == "__main__":
+    run()

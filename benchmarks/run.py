@@ -17,8 +17,8 @@ def main() -> None:
                     help="reduced rounds/samples (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig2,fig3,fig4,fig56,"
-                         "trust,async,async_node,serve,cfl,chain,kernels,"
-                         "fused_round,roofline)")
+                         "trust,async,async_node,serve,network,cfl,chain,"
+                         "kernels,fused_round,roofline)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     q = args.quick
@@ -26,8 +26,8 @@ def main() -> None:
     from benchmarks import (async_ablation, async_node, cfl_baseline,
                             fig2_blockchain, fig3_scalability,
                             fig4_reliability, fig56_convergence,
-                            kernel_bench, proof_serving, roofline,
-                            trust_ablation)
+                            kernel_bench, network_reliability,
+                            proof_serving, roofline, trust_ablation)
 
     suite = {
         "fig2": lambda: fig2_blockchain.run(
@@ -60,6 +60,11 @@ def main() -> None:
             W=10_000 if q else 100_000,
             rounds=3 if q else 4,
             duration_s=1.0 if q else 1.5),
+        # multi-node settlement reliability: fault-free/partition/byzantine
+        # seed sweep (writes the CI-gated BENCH_network_reliability.json:
+        # rejoin within budget, byzantine containment == 1.0)
+        "network": lambda: network_reliability.run(
+            seeds=8 if q else 20),
         "cfl": lambda: cfl_baseline.run(
             rounds=25 if q else 50, samples=2048 if q else 4096),
         "kernels": kernel_bench.run,

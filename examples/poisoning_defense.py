@@ -1,18 +1,32 @@
-"""Scenario: trust penalization defending against poisoning workers.
+"""Scenario: trust penalization defending against poisoning attacks.
 
-8 workers in 2 clusters; two of them label-flip every round. Shows the
-trust scores separating attackers from honest workers, stake erosion via
-Algorithm 1 penalties, and the accuracy protection vs an unprotected run.
+Two attack levels, same defense:
 
-    PYTHONPATH=src python examples/poisoning_defense.py
+- **worker-level** (the default): 8 workers in 2 clusters; two of them
+  label-flip every round. Trust scores separate the attackers, stakes
+  erode via Algorithm 1 penalties, accuracy is protected vs an
+  unprotected run.
+- **head-level** (``--head``): a byzantine *cluster head* poisons its
+  entire cluster's contribution — every worker of cluster 0 ships
+  flipped labels, standing in for a head that corrupts the cluster
+  aggregate before publication. Same attacker count as the worker-level
+  run, but *coherent*: the whole rogue cluster pulls in one poisoned
+  direction instead of two scattered workers. The same per-worker trust
+  scoring still catches it (the rogue cluster's workers all score low),
+  soft trust weighting squeezes the poisoned cluster out of the global
+  model, and the stake of every worker behind the rogue head erodes.
+
+    PYTHONPATH=src python examples/poisoning_defense.py [--head]
 """
+import sys
 
 from repro.configs.base import FederationConfig, TrainConfig
 from repro.configs.registry import get_config
 from repro.core.protocol import SDFLBProtocol
 from repro.data.datasets import make_federated_mnist
 
-BAD = (0, 5)
+BAD = (0, 5)                  # worker-level attackers (scattered)
+HEAD_CLUSTER_WORKERS = (0, 1)     # cluster 0 of 4 behind a byzantine head
 
 
 def flip(batch, round_index):
@@ -22,29 +36,44 @@ def flip(batch, round_index):
     return {**batch, "labels": labels}
 
 
-def run(trust_on: bool) -> dict:
-    fed = FederationConfig(num_clusters=2, workers_per_cluster=4,
+def head_flip(batch, round_index):
+    """Head-level poisoning: the rogue head taints its whole cluster."""
+    labels = batch["labels"]
+    for w in HEAD_CLUSTER_WORKERS:
+        labels = labels.at[w].set(9 - labels[w])
+    return {**batch, "labels": labels}
+
+
+def run(trust_on: bool, *, head_level: bool = False, rounds: int = 40,
+        samples: int = 4096, eval_samples: int = 512) -> dict:
+    # head-level: 4 clusters of 2 so the rogue head owns a whole (small)
+    # cluster; worker-level: the original 2x4 layout
+    fed = FederationConfig(num_clusters=4 if head_level else 2,
+                           workers_per_cluster=2 if head_level else 4,
                            trust_threshold=0.45 if trust_on else -1.0,
                            soft_trust_weighting=trust_on, penalty_pct=5.0)
     tc = TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd")
     proto = SDFLBProtocol(get_config("paper-net"), fed, tc, seed=0,
-                          adversary=flip)
-    ds = make_federated_mnist(8, samples=4096, seed=0)
-    for _ in range(40):
+                          adversary=head_flip if head_level else flip)
+    ds = make_federated_mnist(8, samples=samples, seed=0)
+    for _ in range(rounds):
         rec = proto.run_round(ds.round_batches(32))
-    acc = proto.evaluate(ds.eval_batch(512))["accuracy"]
+    acc = proto.evaluate(ds.eval_batch(eval_samples))["accuracy"]
     proto.flush()   # pipelined driver: settle the trailing round first
     stakes = {w: proto.contract.workers[f"worker-{w}"].stake for w in range(8)}
     proto.finalize()
     return {"acc": acc, "scores": rec.scores, "stakes": stakes}
 
 
-def main() -> None:
-    on = run(True)
-    off = run(False)
+def main(head_level: bool = False) -> None:
+    on = run(True, head_level=head_level)
+    off = run(False, head_level=head_level)
+    attackers = set(HEAD_CLUSTER_WORKERS if head_level else BAD)
+    label = "byzantine head (cluster 0)" if head_level else "poisoning workers"
+    print(f"attack: {label}")
     print("final trust scores (defended run):")
     for w in range(8):
-        tag = "ATTACKER" if w in BAD else "honest"
+        tag = "ATTACKER" if w in attackers else "honest"
         print(f"  worker {w} [{tag:8s}]  S={on['scores'][w]:.3f}  "
               f"stake_left={on['stakes'][w]:.1f}")
     print(f"\naccuracy with trust penalization   : {on['acc']:.3f}")
@@ -52,4 +81,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(head_level="--head" in sys.argv[1:])

@@ -851,6 +851,64 @@ class TrustContract:
                 out.append(float(s[pos[0]]))
         return out
 
+    # -- fork support (repro.net): state snapshot / restore ------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        """Deep-enough copy of all consensus-visible contract state (plus
+        the audit maps that keep ``proof``/``settlement_proof`` working),
+        keyed for ``restore``. A network node snapshots after every
+        applied block so a fork-choice reorg can roll state back to the
+        common ancestor and replay the winning branch
+        (``repro.net.fork_choice``). O(W) per call — sized for the
+        simulated-network harness, not the million-worker dense path."""
+        return {
+            "stake": self.stake.copy(),
+            "balance": self.balance.copy(),
+            "penalized_rounds": self.penalized_rounds.copy(),
+            "score_sum": self.score_sum.copy(),
+            "score_count": self.score_count.copy(),
+            "reward_pool": self.reward_pool,
+            "requester_balance": self.requester_balance,
+            "closed": self.closed,
+            "pending": list(self.pending),
+            "score_log": list(self._score_log),
+            "round_blocks": dict(self._round_blocks),
+            "round_ids": dict(self._round_ids),
+            "round_full_cover": dict(self._round_full_cover),
+            "pop_records": None if self._pop_records is None
+            else self._pop_records.copy(),
+            "last_commit": self._last_commit,
+            "rounds_since_base": self._rounds_since_base,
+        }
+
+    def restore(self, snap: Dict[str, object]) -> None:
+        """Roll state back to a ``snapshot``. The snapshot stays valid
+        (restoring copies again), so one ancestor snapshot can anchor
+        several competing replays. Enrollment cannot be rolled back
+        (names/ids are append-only): restoring across a population change
+        raises."""
+        if len(snap["stake"]) != self.num_workers:
+            raise ContractError(
+                f"snapshot covers {len(snap['stake'])} workers, contract "
+                f"has {self.num_workers} — enrollment is not rollbackable")
+        self.stake = snap["stake"].copy()
+        self.balance = snap["balance"].copy()
+        self.penalized_rounds = snap["penalized_rounds"].copy()
+        self.score_sum = snap["score_sum"].copy()
+        self.score_count = snap["score_count"].copy()
+        self.reward_pool = snap["reward_pool"]
+        self.requester_balance = snap["requester_balance"]
+        self.closed = snap["closed"]
+        self.pending = list(snap["pending"])
+        self._score_log = list(snap["score_log"])
+        self._round_blocks = dict(snap["round_blocks"])
+        self._round_ids = dict(snap["round_ids"])
+        self._round_full_cover = dict(snap["round_full_cover"])
+        pop = snap["pop_records"]
+        self._pop_records = None if pop is None else pop.copy()
+        self._last_commit = snap["last_commit"]
+        self._rounds_since_base = snap["rounds_since_base"]
+
     # -- conservation invariant (property tests) -----------------------------
 
     def total_value(self) -> float:

@@ -132,6 +132,29 @@ class IPFSStore:
                 self.bytes_by_owner.get(owner, 0) + len(blob)
         return cid
 
+    def put_blob(self, blob: bytes, owner: str = None) -> str:
+        """Store an already-serialized blob under its content address —
+        how a gossiped artifact (a peer cluster's aggregate, shipped as
+        raw bytes over ``repro.net``) enters the local store. Same dedup
+        and per-owner quota accounting as ``put_tree``."""
+        cid = hashlib.sha256(blob).hexdigest()
+        if owner is not None and self.owner_quota_bytes:
+            used = self.bytes_by_owner.get(owner, 0)
+            if used + len(blob) > self.owner_quota_bytes:
+                raise QuotaExceeded(owner, used, len(blob),
+                                    self.owner_quota_bytes)
+        if cid not in self._store:
+            self._store[cid] = blob
+            self.bytes_stored += len(blob)
+        else:
+            self.dedup_hits += 1
+        self.puts += 1
+        if owner is not None:
+            self.puts_by_owner[owner] = self.puts_by_owner.get(owner, 0) + 1
+            self.bytes_by_owner[owner] = \
+                self.bytes_by_owner.get(owner, 0) + len(blob)
+        return cid
+
     def get_leaves(self, cid: str):
         blob = self._store[cid]
         if hashlib.sha256(blob).hexdigest() != cid:    # tamper check

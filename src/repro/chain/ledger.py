@@ -981,6 +981,77 @@ class Ledger:
             prev = blk.hash
         return True
 
+    # -- fork tracking (repro.net) --------------------------------------------
+
+    def rollback_to(self, block_index: int) -> List[Block]:
+        """Fork-choice rollback: drop every block *above* ``block_index``
+        (which stays the new head) together with its registered commits.
+        Returns the removed blocks oldest-first, so a caller that tracked
+        them in a fork tree can re-adopt a competing branch. Contract
+        state is *not* touched here — the network node restores its own
+        snapshot for the surviving height and replays the winning branch
+        through ``adopt_block`` (see ``repro.net.fork_choice``)."""
+        if not 0 <= block_index < len(self.blocks):
+            raise ValueError(
+                f"rollback_to({block_index}) outside chain of height "
+                f"{len(self.blocks)}")
+        removed = self.blocks[block_index + 1:]
+        for blk in removed:
+            self._commits.pop(blk.index, None)
+            self._record_trees.pop(blk.index, None)
+        del self.blocks[block_index + 1:]
+        self.work_units += len(removed)
+        return removed
+
+    def adopt_block(self, block: Block,
+                    commit: Optional[MultiTaskCommit] = None,
+                    verify_commit: bool = True) -> Block:
+        """Append an *externally sealed* block (gossiped by a peer node)
+        after LightClient-style verification on receipt: index
+        continuity, ``prev_hash`` linkage, full hash recomputation, and —
+        when the block commits records — that the shipped commit really
+        re-hashes to the block's ``records_root``/``task_roots`` (the
+        tampered-super-root check; ``verify_commit=False`` downgrades it
+        to a root-equality check for commits already verified upstream).
+        Raises ``ValueError`` on any mismatch with nothing applied."""
+        if block.index != len(self.blocks):
+            raise ValueError(
+                f"adopted block index {block.index} != chain height "
+                f"{len(self.blocks)}")
+        if block.prev_hash != self.head.hash:
+            raise ValueError(
+                f"adopted block {block.index} does not link to head "
+                f"{self.head.hash[:12]}…")
+        if block.compute_hash() != block.hash:
+            raise ValueError(
+                f"adopted block {block.index} hash does not recompute")
+        self.work_units += 1 + len(block.transactions)
+        if commit is None:
+            if block.records_root:
+                raise ValueError(
+                    f"adopted block {block.index} commits records but no "
+                    f"commit was supplied")
+        else:
+            root = commit.recompute_root() if verify_commit else commit.root
+            if root != block.records_root:
+                raise ValueError(
+                    f"adopted block {block.index} commit root mismatch "
+                    f"(tampered super-root?)")
+            if block.task_roots is not None \
+                    and block.task_roots != commit.task_roots():
+                raise ValueError(
+                    f"adopted block {block.index} task_roots mismatch")
+            self.work_units += commit.hash_ops
+            # same publication order as _seal: commit registered before
+            # the block becomes visible (lock-free read-path contract)
+            self._commits[block.index] = commit
+            if commit.num_tasks == 1:
+                only = commit.commit_for()
+                if isinstance(only, ShardedCommit) and only.num_shards == 1:
+                    self._record_trees[block.index] = only.trees[0]
+        self.blocks.append(block)
+        return block
+
     # -- per-record audit -----------------------------------------------------
 
     def commit(self, block_index: int) -> MultiTaskCommit:

@@ -982,6 +982,9 @@ class ChainNode:
         # changes who hashes it
         self._shard_pool: Optional[ShardWorkerPool] = None
         self._settler = _SettlerPool(self._settle_tick, pipeline_depth)
+        # seal-broadcast hooks (repro.net): called with each freshly
+        # sealed block + its commit, on the settler thread
+        self._seal_listeners: List[Callable] = []
         self._closed = False
 
     # -- task registry --------------------------------------------------------
@@ -1040,6 +1043,39 @@ class ChainNode:
         """Sticky per-task settlement failures: task_id → (round, error)."""
         return {tid: err for tid in sorted(self.tasks)
                 if (err := self._settler.task_error(tid)) is not None}
+
+    def add_seal_listener(self, fn: Callable) -> None:
+        """Register ``fn(block, commit)`` to run after every block this
+        node seals — the broadcast hook a ``repro.net`` gossip layer
+        attaches to flood freshly sealed blocks to peers. Listeners run
+        on the settler thread, after the block is published on the
+        ledger; a listener exception is node-fatal (like any settler
+        fault), so broadcast hooks should catch their own transport
+        errors."""
+        self._seal_listeners.append(fn)
+
+    def ingest_peer_blocks(self, blocks, commits=None) -> int:
+        """Adopt externally sealed blocks (gossiped by a peer node) onto
+        this node's chain head, oldest-first, after draining in-flight
+        local ticks so the adoption races no settler append. ``commits``
+        maps block index → ``MultiTaskCommit`` for blocks that commit
+        records (shipped alongside the block over the wire). Each block
+        is verified on receipt by ``Ledger.adopt_block`` (linkage, hash
+        recomputation, commit super-root). Returns how many blocks were
+        adopted. Per-contract account state is *not* replayed here —
+        that is ``repro.net.SettlementNode``'s job; this hook is for
+        proof-serving replicas that track a remote chain."""
+        if self._closed:
+            raise RuntimeError("chain node already closed")
+        if self.ledger is None:
+            raise RuntimeError("blockchain disabled on this node")
+        self.drain()
+        commits = commits or {}
+        n = 0
+        for blk in blocks:
+            self.ledger.adopt_block(blk, commits.get(blk.index))
+            n += 1
+        return n
 
     def read_server(self, **kwargs) -> "object":
         """A ``repro.serve.ChainReadServer`` over this live node: head-sync
@@ -1221,6 +1257,8 @@ class ChainNode:
             blk, pens, errors = settle_tasks_block(
                 self.ledger, work, timestamp=float(tp.tick + 1),
                 pool=self._shard_pool)
+            for listener in self._seal_listeners:
+                listener(blk, self.ledger._commits.get(blk.index))
             for (task, p, t0), w in zip(live, work):
                 if w.task_id in errors:
                     outcomes.append((w.task_id, w.round_index, None,

@@ -50,6 +50,10 @@ class LightClient:
         self.server = server
         self.client_id = client_id
         self.headers: List[BlockHeader] = []
+        # resets received while already holding verified headers — i.e.
+        # the server's chain reorged out from under us (repro.net fork
+        # choice) and we re-verified the winning fork from genesis
+        self.reorg_resyncs = 0
 
     @property
     def height(self) -> int:
@@ -79,13 +83,19 @@ class LightClient:
 
     def sync(self) -> int:
         """One head-sync handshake: verify and adopt whatever delta the
-        server returns (or the full chain on ``reset``). Returns the
-        number of headers gained; raises ``HeaderVerificationError`` —
+        server returns (or the full chain on ``reset`` — which, against
+        a ``repro.net`` replica, is how a reorg reaches light clients:
+        the dead-fork claim misses, and the winning fork is re-verified
+        from genesis, counted in ``reorg_resyncs``). Returns the number
+        of headers gained (possibly negative across a reorg onto a
+        shorter-but-heavier fork); raises ``HeaderVerificationError`` —
         leaving local state untouched — on any bad header."""
         claim_hash = self.headers[-1].hash if self.headers else None
         reply = self.server.sync_head(len(self.headers), claim_hash)
         if reply.current:
             return 0
+        if reply.reset and self.headers:
+            self.reorg_resyncs += 1
         base = [] if reply.reset else self.headers
         adopted = self._verify_and_adopt(reply.headers, base)
         gained = len(adopted) - len(self.headers)

@@ -104,6 +104,7 @@ class ChainReadServer:
         # serving stats (monotonic counters; approximate under races,
         # which is fine — they are telemetry, not consensus state)
         self.head_syncs = 0
+        self.head_resets = 0
         self.proof_batches = 0
         self.proofs_served = 0
         self.digests_shipped = 0
@@ -147,8 +148,13 @@ class ChainReadServer:
         (its header count and last header's hash). If the claim matches
         our chain, the reply carries exactly the missing suffix —
         empty when the client is current. An unrecognized claim gets a
-        full ``reset`` resync from genesis (the in-process chain never
-        reorgs, so this only fires on corrupt/foreign client state)."""
+        full ``reset`` resync from genesis. Since ``repro.net``, a
+        reset is a *real signal*, not just corrupt client state: a
+        fork-choice reorg (``Ledger.rollback_to`` + ``adopt_block``)
+        replaces chain suffixes in place, so a client that last synced
+        the losing fork presents a dead head and must re-verify from
+        genesis — the sync_head-mismatch path is how a served replica
+        observes its upstream's reorg (counted in ``head_resets``)."""
         self.head_syncs += 1
         blocks = self.ledger.blocks        # snapshot ref; append-only
         n = len(blocks)
@@ -157,6 +163,7 @@ class ChainReadServer:
             return HeadSync(current=not delta,
                             headers=tuple(header_of(b) for b in delta),
                             reset=False)
+        self.head_resets += 1
         return HeadSync(current=False,
                         headers=tuple(header_of(b) for b in blocks[:n]),
                         reset=True)

@@ -58,6 +58,56 @@ def test_gossip_merge_without_peers_is_identity():
     assert out is own
 
 
+def test_gossip_register_shared_cid_single_put():
+    """Heads sharing one identical tree pay a single IPFS put and per-
+    cluster cid registrations — fetch works for every registrant."""
+    store = IPFSStore()
+    ex = ClusterExchange(store, Ledger(), num_clusters=3)
+    agg = _tree(jax.random.PRNGKey(2))
+    cid = ex.publish(0, 0, agg)
+    ex.register(0, 1, cid)
+    ex.register(0, 2, cid)
+    assert store.puts == 1
+    txs = ex.round_transactions(0)
+    assert [t["cluster"] for t in txs] == [0, 1, 2]
+    assert {t["cid"] for t in txs} == {cid}
+    for c in range(3):
+        out = ex.fetch(0, c, agg)
+        for k in agg:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(agg[k]))
+
+
+def test_gossip_tampered_cid_fetch_raises():
+    """Content addressing makes the store tamper-evident: a corrupted
+    blob no longer hashes to its cid and fetch refuses it."""
+    store = IPFSStore()
+    ex = ClusterExchange(store, Ledger(), num_clusters=2)
+    agg = _tree(jax.random.PRNGKey(3))
+    cid = ex.publish(0, 0, agg)
+    store.tamper(cid, store.read_blob(cid) + b"!")
+    with pytest.raises(ValueError, match="content hash mismatch"):
+        ex.fetch(0, 0, agg)
+
+
+def test_gossip_ingest_roundtrip_and_tamper():
+    """Cross-node transfer: blob() on the publisher, ingest() on a peer
+    with its own store round-trips the aggregate; a tampering relay is
+    caught by the hash check before anything is stored."""
+    a = ClusterExchange(IPFSStore(), Ledger(), num_clusters=2)
+    b = ClusterExchange(IPFSStore(), Ledger(), num_clusters=2)
+    agg = _tree(jax.random.PRNGKey(4))
+    a.publish(0, 0, agg)
+    cid, blob = a.blob(0, 0)
+    b.ingest(0, 0, cid, blob)
+    out = b.fetch(0, 0, agg)
+    for k in agg:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(agg[k]))
+    with pytest.raises(ValueError, match="content hash mismatch"):
+        b.ingest(0, 1, cid, blob + b"\x00")
+    assert 1 not in b._round_cids.get(0, {})   # nothing registered
+
+
 # -- reputation ----------------------------------------------------------------
 
 def test_reputation_ema_and_penalties():
@@ -118,3 +168,30 @@ def test_select_per_cluster_balanced():
     assert m.sum() == 6
     for c in range(3):
         assert m[c * 4:(c + 1) * 4].sum() == 2
+
+
+# -- byzantine-head poisoning defense (examples/poisoning_defense.py) ----------
+
+def test_byzantine_head_defense_accuracy_gap():
+    """A rogue cluster head poisoning its whole cluster is contained by
+    trust penalization: the defended run beats the undefended one on
+    accuracy, and the rogue cluster's workers score lower and lose more
+    stake than every honest worker. Deterministic (all seeds fixed)."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from examples.poisoning_defense import HEAD_CLUSTER_WORKERS, run
+
+    on = run(True, head_level=True, rounds=25, samples=2048,
+             eval_samples=1024)
+    off = run(False, head_level=True, rounds=25, samples=2048,
+              eval_samples=1024)
+    assert on["acc"] - off["acc"] > 0.005     # defended accuracy gap
+    att = set(HEAD_CLUSTER_WORKERS)
+    honest = [w for w in range(8) if w not in att]
+    scores = np.asarray(on["scores"])
+    assert scores[list(att)].mean() < scores[honest].mean() - 0.02
+    # every rogue-cluster worker lost more stake than any honest worker
+    assert max(on["stakes"][w] for w in att) \
+        < min(on["stakes"][w] for w in honest)

@@ -1,0 +1,283 @@
+"""Unit tests for fork tracking, reorg rollback/replay, and gossip
+message hygiene (repro.net satellites).
+
+Covers ``BlockTree`` scoring (height > cumulative trust > smaller
+hash), reorg over *sparse* ``DeltaCommit`` overlay ledgers (idle-worker
+proofs survive a rollback; ``verify_chain(deep=True)`` stays green
+before and after adopting the competing branch), ``adopt_block``'s
+rejection matrix, and malformed/stale gossip-message rejection on a
+live ``SettlementNode``."""
+import numpy as np
+import pytest
+
+from repro.chain.contract import TrustContract
+from repro.chain.ledger import Block, Ledger
+from repro.net import (AggregateGossip, BlockGossip, BlockTree, ChainRequest,
+                       ChainResponse, HeadAnnounce, ScoreGossip,
+                       SettlementNode, SimNet, apply_reorg, block_trust,
+                       seal_info)
+
+
+def _seal_block(parent: Block, round_index: int, proposer: int,
+                trust: float, tag: str = "") -> Block:
+    txs = [{"type": "seal", "round": round_index, "proposer": proposer,
+            "trust": trust}]
+    if tag:
+        txs.append({"type": "tag", "tag": tag})
+    blk = Block(parent.index + 1, parent.hash, txs,
+                float(round_index + 1))
+    blk.hash = blk.compute_hash()
+    return blk
+
+
+@pytest.fixture
+def base():
+    ledger = Ledger()
+    ledger.append_block([{"type": "deploy", "deposit": 100.0}],
+                        timestamp=0.0)
+    return ledger
+
+
+# -- BlockTree scoring --------------------------------------------------------
+
+def test_seal_info_and_trust_extraction(base):
+    blk = _seal_block(base.head, 3, 1, 2.5)
+    assert seal_info(blk) == (3, 1)
+    assert block_trust(blk) == 2.5
+    assert seal_info(base.head) is None          # deploy block: no seal
+    assert block_trust(base.head) == 0.0
+
+
+def test_fork_choice_longest_chain_wins(base):
+    tree = BlockTree(list(base.blocks))
+    a1 = _seal_block(base.head, 0, 0, 1.0, "a")
+    b1 = _seal_block(base.head, 0, 1, 9.0, "b")
+    a2 = _seal_block(a1, 1, 0, 1.0, "a")
+    for blk in (a1, b1, a2):
+        assert tree.add(blk)
+    # height beats trust: a-branch is longer though b1 carries more
+    assert tree.best_head() == a2.hash
+
+
+def test_fork_choice_trust_tiebreak_and_hash_tiebreak(base):
+    tree = BlockTree(list(base.blocks))
+    lo = _seal_block(base.head, 0, 0, 1.0, "lo")
+    hi = _seal_block(base.head, 0, 1, 5.0, "hi")
+    tree.add(lo)
+    tree.add(hi)
+    assert tree.best_head() == hi.hash           # equal height: trust wins
+    eq = _seal_block(base.head, 0, 2, 5.0, "eq")
+    tree.add(eq)
+    assert tree.best_head() == min(hi.hash, eq.hash)   # equal: smaller hash
+
+
+def test_invalidate_covers_descendants(base):
+    tree = BlockTree(list(base.blocks))
+    a1 = _seal_block(base.head, 0, 0, 1.0)
+    a2 = _seal_block(a1, 1, 0, 1.0)
+    b1 = _seal_block(base.head, 0, 1, 0.5, "b")
+    for blk in (a1, a2, b1):
+        tree.add(blk)
+    assert tree.best_head() == a2.hash
+    assert tree.invalidate(a1.hash) == 2         # a1 + a2
+    assert not tree.is_valid(a2.hash)
+    assert tree.best_head() == b1.hash
+    # children added under an invalid parent inherit the invalidation
+    a3 = _seal_block(a2, 2, 0, 9.9)
+    assert tree.add(a3)
+    assert not tree.is_valid(a3.hash)
+    assert tree.best_head() == b1.hash
+
+
+def test_orphan_add_returns_false(base):
+    tree = BlockTree(list(base.blocks))
+    a1 = _seal_block(base.head, 0, 0, 1.0)
+    a2 = _seal_block(a1, 1, 0, 1.0)
+    assert not tree.add(a2)                      # parent unknown
+    assert a2.hash not in tree
+    assert tree.add(a1) and tree.add(a2)
+
+
+def test_ancestor_and_chain_to(base):
+    tree = BlockTree(list(base.blocks))
+    a1 = _seal_block(base.head, 0, 0, 1.0, "a")
+    a2 = _seal_block(a1, 1, 0, 1.0, "a")
+    b1 = _seal_block(base.head, 0, 1, 1.0, "b")
+    for blk in (a1, a2, b1):
+        tree.add(blk)
+    assert tree.ancestor(a2.hash, b1.hash) == base.head.hash
+    assert [b.index for b in tree.chain_to(a2.hash)] == [0, 1, 2, 3]
+    with pytest.raises(KeyError):
+        tree.chain_to("f" * 64)
+
+
+# -- reorg over sparse DeltaCommit overlay chains ----------------------------
+
+def _sparse_pair():
+    """Two replicas of one sparse-settlement task, bit-identical through
+    round 1 (partial participation, so round-1 blocks carry DeltaCommit
+    overlays whose ancestors the reorg must preserve)."""
+    out = []
+    for _ in range(2):
+        ledger = Ledger()
+        c = TrustContract(ledger, requester_deposit=100.0, worker_stake=10.0,
+                          penalty_pct=50.0, trust_threshold=0.4, top_k=3,
+                          merkle_chunk_size=2, sparse_settlement=True)
+        c.join_batch(6)
+        c.settle_round_batch(0, np.full(6, 0.9), timestamp=1.0)
+        # partial round: workers 4,5 idle — a delta overlay block
+        c.settle_round_batch(1, np.asarray([0.8, 0.3, 0.7, 0.9]),
+                             worker_ids=np.arange(4), timestamp=2.0)
+        out.append((ledger, c))
+    return out
+
+
+def test_reorg_preserves_delta_overlays_and_idle_proofs():
+    (ledger_a, con_a), (ledger_b, con_b) = _sparse_pair()
+    assert [b.hash for b in ledger_a.blocks] \
+        == [b.hash for b in ledger_b.blocks]
+    # replicas diverge at round 2: different cohorts
+    con_a.settle_round_batch(2, np.asarray([0.6, 0.5]),
+                             worker_ids=np.asarray([0, 1]), timestamp=3.0)
+    con_b.settle_round_batch(2, np.asarray([0.9, 0.2, 0.6]),
+                             worker_ids=np.asarray([2, 3, 4]), timestamp=3.0)
+    fork_a, fork_b = ledger_a.head, ledger_b.head
+    assert fork_a.hash != fork_b.hash and fork_a.index == fork_b.index
+    # A reorgs onto B's branch via the fork tree
+    tree = BlockTree(ledger_a.blocks[:fork_a.index],
+                     {i: ledger_a._commits.get(i)
+                      for i in range(fork_a.index)})
+    assert tree.add(fork_a, ledger_a.commit(fork_a.index))
+    assert tree.add(fork_b, ledger_b.commit(fork_b.index))
+    anc_index, adopted = apply_reorg(ledger_a, tree, fork_b.hash)
+    assert anc_index == fork_a.index - 1
+    assert [b.hash for b in adopted] == [fork_b.hash]
+    assert ledger_a.head.hash == fork_b.hash
+    # the whole chain — including the adopted delta overlay whose base
+    # commit lives in the surviving prefix — deep-verifies
+    assert ledger_a.verify_chain(deep=True)
+    # idle-worker proof survives: worker 5 idled in round 1, its record
+    # is still provable out of the surviving delta block…
+    proof = con_a.proof(1, 5)
+    assert proof.verify(ledger_a.blocks[proof.block_index])
+    assert proof.record["worker"] == 5
+    # …and in the *adopted* round-2 block (full-population overlay), via
+    # the replica whose round map matches the winning branch
+    proof_b = con_b.proof(2, 5)
+    assert proof_b.verify(ledger_a.head)
+
+
+def test_rollback_then_deep_verify_green():
+    (ledger, con), _ = _sparse_pair()
+    head_before = ledger.head.hash
+    removed = ledger.rollback_to(1)
+    assert [b.index for b in removed] == [2]
+    assert ledger.head.index == 1 and ledger.head.hash != head_before
+    assert ledger.verify_chain(deep=True)
+    # proofs from the surviving prefix still verify
+    proof = con.proof(0, 3)
+    assert proof.verify(ledger.blocks[proof.block_index])
+    with pytest.raises(ValueError):
+        ledger.rollback_to(len(ledger.blocks))   # out of range
+    with pytest.raises(ValueError):
+        ledger.rollback_to(-1)
+
+
+def test_adopt_block_rejection_matrix():
+    (ledger_a, _), (ledger_b, con_b) = _sparse_pair()
+    ledger_a.rollback_to(1)
+    good = ledger_b.blocks[2]
+    commit = ledger_b.commit(2)
+    # wrong index
+    with pytest.raises(ValueError, match="index"):
+        ledger_a.adopt_block(ledger_b.blocks[1], ledger_b._commits.get(1))
+    # wrong parent linkage
+    orphan = Block(2, "a" * 64, good.transactions, good.timestamp,
+                   records_root=good.records_root)
+    orphan.hash = orphan.compute_hash()
+    with pytest.raises(ValueError, match="link"):
+        ledger_a.adopt_block(orphan, commit)
+    # hash does not recompute
+    forged = Block(good.index, good.prev_hash, good.transactions,
+                   good.timestamp, records_root=good.records_root,
+                   hash="b" * 64)
+    with pytest.raises(ValueError, match="recompute"):
+        ledger_a.adopt_block(forged, commit)
+    # records committed but no commit shipped
+    with pytest.raises(ValueError, match="no.*commit"):
+        ledger_a.adopt_block(good, None)
+    # tampered super-root: commit does not re-hash to records_root
+    con_b.settle_round_batch(3, np.full(6, 0.9), timestamp=4.0)
+    wrong_commit = ledger_b.commit(3)
+    with pytest.raises(ValueError, match="tampered super-root"):
+        ledger_a.adopt_block(good, wrong_commit)
+    # the good pair still adopts after all those rejections
+    ledger_a.adopt_block(good, commit)
+    assert ledger_a.verify_chain(deep=True)
+
+
+# -- malformed / stale gossip rejection ---------------------------------------
+
+@pytest.fixture
+def live_node():
+    net = SimNet(seed=0)
+    node = SettlementNode(0, net, num_nodes=2, workers_per_node=2)
+    SettlementNode(1, net, num_nodes=2, workers_per_node=2)
+    return net, node
+
+
+def test_malformed_messages_counted_not_crashing(live_node):
+    net, node = live_node
+    node.on_message(1, "not a message")
+    node.on_message(1, ScoreGossip(0, 5, (2, 3), (0.5, 0.5)))   # wrong src
+    node.on_message(1, ScoreGossip(0, 1, (2, 2), (0.5, 0.5)))   # dup ids
+    node.on_message(1, ScoreGossip(0, 1, (0, 1), (0.5, 0.5)))   # foreign ids
+    node.on_message(1, ScoreGossip(0, 1, (2, 3), (1.5, 0.5)))   # score > 1
+    node.on_message(1, ScoreGossip(-1, 1, (2, 3), (0.5, 0.5)))  # bad round
+    node.on_message(1, HeadAnnounce(-1, "x"))
+    node.on_message(1, ChainRequest(-3))
+    node.on_message(1, ChainResponse((), (None,)))              # ragged
+    assert node.malformed_messages == 9
+    assert 0 not in node._scores.get(0, {})
+
+
+def test_stale_score_gossip_counted(live_node):
+    net, node = live_node
+    node.begin_round(0)
+    node.maybe_propose(0, node.candidate_rank(0))
+    assert 0 in node.contract._round_blocks
+    node.on_message(1, ScoreGossip(0, 1, (2, 3), (0.5, 0.5)))
+    assert node.stale_messages == 1
+
+
+def test_tampered_aggregate_gossip_rejected(live_node):
+    net, node = live_node
+    peer_net = SimNet(seed=1)
+    peer = SettlementNode(0, peer_net, num_nodes=2, workers_per_node=2)
+    peer.begin_round(0)
+    cid, blob = peer.exchange.blob(0, 0)
+    node.on_message(1, AggregateGossip(0, 1, cid, blob + b"!"))
+    assert node.rejected_aggregates == 1
+    assert not node.exchange.ipfs.has(cid)
+    node.on_message(1, AggregateGossip(0, 1, cid, blob))        # honest copy
+    assert node.exchange.ipfs.has(cid)
+
+
+def test_bad_block_gossip_rejected(live_node):
+    net, node = live_node
+    head = node.ledger.head
+    # hash does not recompute
+    fake = Block(head.index + 1, head.hash,
+                 [{"type": "seal", "round": 0, "proposer": 1,
+                   "trust": 1.0}], 1.0, hash="c" * 64)
+    node.on_message(1, BlockGossip(fake, None))
+    # sealless block; unknown proposer
+    for txs in ([{"type": "noise"}],
+                [{"type": "seal", "round": 0, "proposer": 99,
+                  "trust": 1.0}]):
+        blk = Block(head.index + 1, head.hash, txs, 1.0)
+        blk.hash = blk.compute_hash()
+        node.on_message(1, BlockGossip(blk, None))
+    assert node.rejected_blocks == 3
+    assert node.ledger.head.hash == head.hash
+    assert node.malformed_messages == 0

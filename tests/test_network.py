@@ -1,0 +1,279 @@
+"""Property tests for the multi-node settlement network (repro.net).
+
+The ISSUE-level guarantees, each asserted byte-for-byte:
+
+- fault-free N-node cohorts converge to *byte-identical* chains for any
+  seeded gossip order, with replica contract state bit-equal across
+  nodes and to a from-scratch replay of the canonical chain;
+- a partition produces divergent forks, and the rejoin converges every
+  replica onto the fork-choice winner with contract state bit-equal to
+  a single-node replay of the winning chain;
+- an equivocating byzantine head is detected in every seeded run: its
+  block never canonicalizes, equivocation evidence lands on-chain, and
+  its head worker is slashed;
+- a LightClient that synced the losing fork observes the reorg as a
+  ``reset`` resync and ends bit-aligned with the winning chain.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.net import (LinkSpec, NetworkHarness, contract_fingerprint,
+                       head_worker, replay_chain)
+from repro.serve import ChainReadServer, LightClient
+
+
+def _chains(harness, honest_only=True):
+    nodes = harness.honest_nodes() if honest_only else harness.nodes
+    return [[b.hash for b in n.ledger.blocks] for n in nodes]
+
+
+# -- fault-free convergence --------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), num_nodes=st.sampled_from([2, 3, 5]))
+@settings(max_examples=10, deadline=None)
+def test_fault_free_convergence_any_seed(seed, num_nodes):
+    """Any gossip schedule (per-link seeded latency/jitter) converges
+    every replica to one byte-identical chain and bit-equal state."""
+    h = NetworkHarness(num_nodes, seed=seed,
+                       link=LinkSpec(latency=0.02, jitter=0.03))
+    h.run(3)
+    chains = _chains(h)
+    assert all(c == chains[0] for c in chains[1:])
+    assert len(chains[0]) == 2 + 3          # genesis + deploy + 3 rounds
+    fps = [contract_fingerprint(n.contract) for n in h.nodes]
+    assert all(fp == fps[0] for fp in fps[1:])
+    # replay oracle: incremental replica state == from-scratch replay
+    n0 = h.nodes[0]
+    _, replayed = replay_chain(n0.ledger.blocks, n0.ledger._commits,
+                               h.workers_per_node)
+    assert contract_fingerprint(replayed) == fps[0]
+    assert all(n.verify() for n in h.nodes)
+
+
+def test_runs_are_byte_reproducible():
+    """Same seed → identical chains; different net seed, same score
+    seed → identical settled state may differ only in gossip schedule."""
+    a = NetworkHarness(3, seed=42)
+    b = NetworkHarness(3, seed=42)
+    a.run(4)
+    b.run(4)
+    assert _chains(a) == _chains(b)
+    assert a.net.delivered == b.net.delivered
+    assert [contract_fingerprint(n.contract) for n in a.nodes] \
+        == [contract_fingerprint(n.contract) for n in b.nodes]
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_lossy_links_still_converge(seed):
+    """iid message loss delays but never breaks convergence: lost
+    proposals are healed by backup proposers and block relay."""
+    h = NetworkHarness(3, seed=seed,
+                       link=LinkSpec(latency=0.02, jitter=0.02, loss=0.15))
+    h.run(6)
+    h.sync()            # anti-entropy waves heal final-round losses
+    chains = _chains(h)
+    assert all(c == chains[0] for c in chains[1:])
+    assert all(n.verify() for n in h.nodes)
+
+
+# -- partition → forks → rejoin ---------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_partition_rejoin_converges_to_fork_choice_winner(seed):
+    h = NetworkHarness(3, seed=seed,
+                       partition_rounds=[(1, 3, ((0, 1), (2,)))])
+    h.run(3)
+    # during the split both sides kept settling: divergent forks
+    assert h.nodes[0].ledger.head.hash == h.nodes[1].ledger.head.hash
+    assert h.nodes[2].ledger.head.hash != h.nodes[0].ledger.head.hash
+    h.run(2)
+    chains = _chains(h)
+    assert all(c == chains[0] for c in chains[1:])
+    # the majority side won on the cumulative-trust tiebreak (it settled
+    # the whole 3-cluster cohort; the minority settled only its own),
+    # so the minority node is the one that reorged
+    assert h.nodes[2].reorgs >= 1
+    # contract state bit-equal to a single-node replay of the winner
+    winner = h.nodes[2]
+    _, replayed = replay_chain(winner.ledger.blocks, winner.ledger._commits,
+                               h.workers_per_node)
+    assert contract_fingerprint(replayed) \
+        == contract_fingerprint(winner.contract)
+    assert all(n.verify() for n in h.nodes)
+
+
+def test_partition_forks_carry_both_sides_rounds():
+    """The winning chain still settles every round — the partition costs
+    the minority its fork, not the federation its rounds."""
+    h = NetworkHarness(3, seed=9, partition_rounds=[(1, 3, ((0, 1), (2,)))])
+    h.run(5)
+    assert h.converged()
+    settled = sorted(h.nodes[0].contract._round_blocks)
+    assert settled == [0, 1, 2, 3, 4]
+
+
+# -- byzantine equivocating head ---------------------------------------------
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_equivocating_head_detected_and_penalized_every_seed(seed):
+    byz = 1
+    h = NetworkHarness(3, seed=seed, byzantine={byz: "equivocate"})
+    h.run(4)
+    honest = h.honest_nodes()
+    chains = _chains(h)
+    assert all(c == chains[0] for c in chains[1:])
+    for n in honest:
+        # detection: every honest replica saw the conflict
+        assert n.evidence_found >= 1
+        assert byz in n._equivocators
+        txs = [tx for b in n.ledger.blocks for tx in b.transactions
+               if isinstance(tx, dict)]
+        # evidence landed on-chain…
+        evidence = [tx for tx in txs if tx.get("type") == "equivocation"
+                    and tx["proposer"] == byz]
+        assert len(evidence) >= 1
+        assert sorted(evidence[0]["blocks"]) == evidence[0]["blocks"]
+        # …no equivocated seal canonicalized…
+        assert all(tx["proposer"] != byz for tx in txs
+                   if tx.get("type") == "seal")
+        # …and the offender's head worker was slashed below full stake
+        w = head_worker(evidence[0]["round"], byz, h.workers_per_node)
+        assert n.contract.penalized_rounds[w] >= 1
+    # every round still settled (honest backups healed the slots)
+    assert sorted(honest[0].contract._round_blocks) == [0, 1, 2, 3]
+    assert all(n.verify() for n in honest)
+
+
+def test_tampered_super_root_rejected_and_penalized():
+    """A head gossiping its block with forged settlement records is
+    caught by semantic validation on receipt and slashed on-chain."""
+    byz = 0
+    h = NetworkHarness(3, seed=6, byzantine={byz: "tamper"})
+    h.run(4)
+    honest = h.honest_nodes()
+    assert h.converged()
+    for n in honest:
+        assert n.rejected_blocks >= 1
+        txs = [tx for b in n.ledger.blocks for tx in b.transactions
+               if isinstance(tx, dict)]
+        evidence = [tx for tx in txs if tx.get("type") == "tampered_block"
+                    and tx["proposer"] == byz]
+        assert len(evidence) >= 1
+        assert "tampered" in evidence[0]["error"]
+        assert all(tx["proposer"] != byz for tx in txs
+                   if tx.get("type") == "seal")
+    assert all(n.verify() for n in honest)
+
+
+# -- serve integration: light clients across a reorg --------------------------
+
+def test_light_client_resyncs_across_reorg():
+    h = NetworkHarness(3, seed=3, partition_rounds=[(1, 3, ((0, 1), (2,)))])
+    minority = h.nodes[2]
+    server = ChainReadServer(ledger=minority.ledger,
+                             contracts={None: minority.contract})
+    client = LightClient(server)
+    h.run(3)
+    client.sync()                     # client tracks the minority fork
+    fork_head = client.headers[-1].hash
+    assert fork_head == minority.ledger.head.hash
+    h.run(2)                          # rejoin: minority reorgs
+    assert minority.reorgs >= 1
+    gained = client.sync()
+    assert client.reorg_resyncs == 1
+    assert server.head_resets >= 1
+    assert client.headers[-1].hash == minority.ledger.head.hash
+    assert client.headers[-1].hash != fork_head
+    assert len(client.headers) == len(minority.ledger.blocks)
+    assert gained == len(client.headers) - (2 + 3)   # vs pre-reorg height
+    # proofs resolve against the post-reorg chain
+    r = server.latest_settled_round(None)
+    batch = server.get_proofs(None, [0], round_index=r)
+    assert client.verify_batch(batch)
+
+
+# -- conservation -------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000),
+       scenario=st.sampled_from(["clean", "partition", "equivocate"]))
+@settings(max_examples=9, deadline=None)
+def test_total_value_conserved(seed, scenario):
+    """Penalties move stake, never mint or burn it — on every replica,
+    through partitions, reorgs, and evidence slashes."""
+    kw = {}
+    if scenario == "partition":
+        kw["partition_rounds"] = [(1, 3, ((0, 1), (2,)))]
+    elif scenario == "equivocate":
+        kw["byzantine"] = {1: "equivocate"}
+    h = NetworkHarness(3, seed=seed, **kw)
+    initial = h.nodes[0].contract.total_value()
+    h.run(4)
+    for n in h.honest_nodes():
+        assert n.contract.total_value() == pytest.approx(initial)
+
+
+def test_converged_state_matches_across_scenarios():
+    """The defended end-state is scenario-independent where it should
+    be: honest replicas agree bit-for-bit in every scenario."""
+    for kw in ({}, {"partition_rounds": [(1, 2, ((0,), (1, 2)))]},
+               {"byzantine": {2: "tamper"}}):
+        h = NetworkHarness(3, seed=5, **kw)
+        h.run(4)
+        fps = [contract_fingerprint(n.contract) for n in h.honest_nodes()]
+        assert all(fp == fps[0] for fp in fps[1:]), kw
+
+
+def test_chain_node_seal_listener_feeds_peer_replica():
+    """The ChainNode network seam: a seal listener captures every block
+    the live settler publishes (with its commit), and a peer node
+    adopts the stream verbatim — replica chain byte-identical to the
+    leader's and deep-verifiable, like a proof-serving follower."""
+    from repro.configs.base import FederationConfig, TrainConfig
+    from repro.configs.registry import get_config
+    from repro.core.node import ChainNode
+    from repro.data.datasets import make_federated_mnist
+
+    fed = FederationConfig(num_clusters=1, workers_per_cluster=3,
+                           trust_threshold=0.3, merkle_chunk_size=2)
+    leader = ChainNode(pipeline_depth=2)
+    sealed = []
+    leader.add_seal_listener(lambda blk, commit: sealed.append((blk,
+                                                                commit)))
+    leader.create_task("t", get_config("paper-net"), fed,
+                       TrainConfig(lr=0.01, momentum=0.5, optimizer="sgd"),
+                       seed=0)
+    ds = make_federated_mnist(3, samples=192, seed=0)
+    for _ in range(2):
+        leader.run_tick({"t": ds.round_batches(32)})
+    leader.flush()
+    assert len(sealed) == len(leader.ledger.blocks) - 1   # all but genesis
+
+    follower = ChainNode(pipeline_depth=0)
+    n = follower.ingest_peer_blocks(
+        [blk for blk, _ in sealed],
+        commits={blk.index: c for blk, c in sealed if c is not None})
+    assert n == len(sealed)
+    assert [b.hash for b in follower.ledger.blocks] \
+        == [b.hash for b in leader.ledger.blocks]
+    assert follower.ledger.verify_chain(deep=True)
+    # a forked/tampered block is refused by adopt-time verification
+    bad, commit = sealed[-1]
+    with pytest.raises(ValueError):
+        follower.ingest_peer_blocks([bad], commits={bad.index: commit})
+    leader.finalize()
+
+
+def test_sim_counters_account_for_every_send():
+    h = NetworkHarness(3, seed=8,
+                       link=LinkSpec(latency=0.02, jitter=0.01, loss=0.2),
+                       partition_rounds=[(1, 2, ((0, 1), (2,)))])
+    h.run(3)
+    net = h.net
+    scheduled = net.sent - net.dropped_loss - net.dropped_partition
+    assert net.dropped_loss > 0 and net.dropped_partition > 0
+    assert net.delivered == scheduled        # harness drains every round
